@@ -1,0 +1,29 @@
+"""Autotuner (paper Sec. VII future work): best modeled config per
+benchmark per machine, with the automated Fig. 3a bottleneck decision."""
+from repro.core.analytic import RTX3080_PAPER, TPU_V5E
+from repro.core.autotune import autotune
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+
+from .common import N_STEPS, OOC_SZ, emit
+
+
+def run():
+    rows = []
+    for name in PAPER_BENCHMARKS:
+        st = get_stencil(name)
+        for hw, tag in ((RTX3080_PAPER, "rtx3080"), (TPU_V5E, "tpu_v5e")):
+            ranked = autotune(st, OOC_SZ, N_STEPS, hw)
+            if not ranked:
+                continue
+            b = ranked[0]
+            rows.append((
+                f"autotune/{name}/{tag}",
+                b.time_s * 1e6 / N_STEPS,
+                f"modeled best engine={b.engine} d={b.d} s_tb={b.s_tb} "
+                f"k_on={b.k_on} next_target={b.bottleneck}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

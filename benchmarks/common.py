@@ -1,0 +1,64 @@
+"""Shared benchmark plumbing.
+
+Paper workloads (Table III): out-of-core 38400^2 fp32 (11.0 GB counting
+the in/out array pair), in-core 12800^2 (1.2 GB), 640 total steps,
+3 streams.  Numbers produced here are either
+
+* ``measured_cpu``  — wall-clock on this container (jnp/interpret Pallas), or
+* ``modeled_tpu``   — the paper's Sec. III model + exact TransferStats
+  geometry, evaluated with TPU-v5e constants (and RTX3080 constants where
+  we sanity-check against the paper's own numbers),
+
+and every CSV row labels which.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.core.accounting import predict_stats
+from repro.core.analytic import EngineTimes, Hardware, TPU_V5E, RTX3080_PAPER, model_times
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+
+OOC_SZ = 38400       # out-of-core domain (11.0 GB with 2 arrays)
+INC_SZ = 12800       # in-core domain (1.2 GB)
+N_STEPS = 640
+K_ON = 4             # the paper's four-step kernels
+
+# the run-time configs the paper selects per benchmark (Sec. V-B)
+PAPER_CONFIG = {
+    "box2d1r": (4, 160),
+    "box2d2r": (4, 160),
+    "box2d3r": (4, 80),
+    "box2d4r": (4, 40),
+    "gradient2d": (4, 160),
+}
+
+PAPER_SPEEDUP_VS_RESREU = {
+    "box2d1r": 4.22, "box2d2r": 2.94, "box2d3r": 1.97,
+    "box2d4r": 1.19, "gradient2d": 3.59,
+}
+
+
+def modeled(engine: str, name: str, sz: int, d: int, s_tb: int,
+            hw: Hardware = TPU_V5E, k_on: int = K_ON,
+            n: int = N_STEPS) -> EngineTimes:
+    st = get_stencil(name)
+    Y = X = sz + 2 * st.radius
+    k_on_eff = 1 if engine == "resreu" else k_on
+    stats = predict_stats(engine, st, Y, X, n, d, s_tb, k_on_eff)
+    return model_times(stats, hw)
+
+
+def timeit(fn: Callable, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

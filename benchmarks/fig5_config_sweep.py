@@ -1,0 +1,35 @@
+"""Paper Fig. 5: SO2DR performance across run-time configurations
+(d x S_TB) on the out-of-core dataset — modeled with TPU-v5e constants.
+"""
+from repro.core.params import CodeSpec, feasible
+from repro.core.analytic import TPU_V5E
+
+from .common import K_ON, N_STEPS, OOC_SZ, PAPER_BENCHMARKS, emit, modeled
+
+
+def run():
+    rows = []
+    for name in PAPER_BENCHMARKS:
+        from repro.core.stencil import get_stencil
+        st = get_stencil(name)
+        code = CodeSpec(sz=OOC_SZ, radius=st.radius, b_elem=4,
+                        total_steps=N_STEPS, n_arrays=2)
+        for d in (4, 8):
+            for s_tb in (40, 80, 160, 320, 640):
+                feas = feasible(code, TPU_V5E, d, s_tb)
+                try:
+                    t = modeled("so2dr", name, OOC_SZ, d, s_tb)
+                except ValueError:
+                    continue
+                total = t.total_overlapped()
+                rows.append((
+                    f"fig5/{name}/d{d}/stb{s_tb}",
+                    total * 1e6 / N_STEPS,  # us per time step
+                    f"modeled_tpu total_s={total:.3f} feasible={feas} "
+                    f"kernel_s={t.kernel:.3f} h2d_s={t.h2d:.3f}",
+                ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

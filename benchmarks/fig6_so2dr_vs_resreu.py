@@ -1,0 +1,32 @@
+"""Paper Fig. 6: SO2DR vs ResReu speedups on the five stencil benchmarks
+(out-of-core dataset), modeled on both the paper's RTX 3080 (validating
+the reproduction against the paper's reported speedups) and TPU v5e (the
+deployment target).
+"""
+from repro.core.analytic import RTX3080_PAPER, TPU_V5E
+
+from .common import (
+    N_STEPS, OOC_SZ, PAPER_BENCHMARKS, PAPER_CONFIG,
+    PAPER_SPEEDUP_VS_RESREU, emit, modeled,
+)
+
+
+def run():
+    rows = []
+    for name in PAPER_BENCHMARKS:
+        d, s_tb = PAPER_CONFIG[name]
+        for hw, tag in ((RTX3080_PAPER, "rtx3080"), (TPU_V5E, "tpu_v5e")):
+            t_so = modeled("so2dr", name, OOC_SZ, d, s_tb, hw=hw)
+            t_rr = modeled("resreu", name, OOC_SZ, d, s_tb, hw=hw)
+            sp = t_rr.total_overlapped() / t_so.total_overlapped()
+            rows.append((
+                f"fig6/{name}/{tag}",
+                t_so.total_overlapped() * 1e6 / N_STEPS,
+                f"modeled speedup_vs_resreu={sp:.2f} "
+                f"paper_reported={PAPER_SPEEDUP_VS_RESREU[name]}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

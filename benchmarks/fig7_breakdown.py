@@ -1,0 +1,24 @@
+"""Paper Fig. 7: execution-time breakdown (HtoD / kernel / O-D / DtoH)
+for SO2DR vs ResReu on the out-of-core dataset, TPU-v5e model.
+"""
+from .common import N_STEPS, OOC_SZ, PAPER_BENCHMARKS, PAPER_CONFIG, emit, modeled
+
+
+def run():
+    rows = []
+    for name in PAPER_BENCHMARKS:
+        d, s_tb = PAPER_CONFIG[name]
+        for engine in ("so2dr", "resreu", "naive_tb"):
+            t = modeled(engine, name, OOC_SZ, d, s_tb)
+            rows.append((
+                f"fig7/{name}/{engine}",
+                t.total_serial * 1e6 / N_STEPS,
+                f"modeled_tpu h2d={t.h2d:.3f} kernel={t.kernel:.3f} "
+                f"odc={t.odc:.4f} d2h={t.d2h:.3f} "
+                f"kmem={t.kernel_mem:.3f} kcomp={t.kernel_compute:.3f}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,49 @@
+"""Paper Fig. 8: per-kernel time of *single-step* kernels across radii.
+
+The paper observes these are nearly constant in stencil radius on its GPU
+(memory-bound at 39 flops/byte of headroom).  On TPU v5e the VPU's
+4.8 flops/byte crossover means only r=1 stays memory-bound — the modeled
+column quantifies that hardware-adaptation shift (DESIGN.md §2); the
+measured column is this container's CPU wall time for the same kernels.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.analytic import RTX3080_PAPER, TPU_V5E
+from repro.core.reference import step_domain
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+
+from .common import emit, timeit
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    SZ = 1536
+    for name in PAPER_BENCHMARKS:
+        st = get_stencil(name)
+        x = jnp.asarray(rng.standard_normal((SZ, SZ)).astype(np.float32))
+        step = jax.jit(lambda a, n=st.name: step_domain(a, get_stencil(n)))
+        t_cpu = timeit(lambda: jax.block_until_ready(step(x)))
+        elems = (SZ - 2 * st.radius) ** 2
+        for hw, tag in ((RTX3080_PAPER, "rtx3080"), (TPU_V5E, "tpu_v5e")):
+            t_mem = 2 * 4 * elems / hw.bw_dmem
+            t_cmp = st.flops_per_elem * elems / hw.peak_vpu_flops
+            bound = "memory" if t_mem > t_cmp else "compute"
+            rows.append((
+                f"fig8/{name}/{tag}",
+                max(t_mem, t_cmp) * 1e6,
+                f"modeled single-step kernel; bound={bound} "
+                f"mem_us={t_mem*1e6:.1f} comp_us={t_cmp*1e6:.1f}",
+            ))
+        rows.append((
+            f"fig8/{name}/measured_cpu",
+            t_cpu * 1e6,
+            f"measured_cpu single-step jnp @ {SZ}x{SZ}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

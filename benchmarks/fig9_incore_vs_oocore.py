@@ -1,0 +1,31 @@
+"""Paper Fig. 9/10: in-core code vs the two out-of-core codes on the
+in-core dataset (12800^2, fits in device memory).
+
+The paper's surprise result — SO2DR ~matching or beating the in-core code
+(1.14x mean) — rests on multi-stream kernel overlap; our Sec. III model
+treats kernels as serialized, so SO2DR == in-core is the modeled
+expectation (ratio 1.0) and ResReu shows the single-step-kernel penalty.
+"""
+from .common import INC_SZ, K_ON, N_STEPS, PAPER_BENCHMARKS, emit, modeled
+
+
+def run():
+    rows = []
+    for name in PAPER_BENCHMARKS:
+        t_inc = modeled("incore", name, INC_SZ, 1, N_STEPS)
+        # in-core: transfer excluded per the paper's protocol
+        base = t_inc.kernel
+        for engine in ("so2dr", "resreu"):
+            t = modeled(engine, name, INC_SZ, 4, 160)
+            ratio = t.total_overlapped() / base
+            rows.append((
+                f"fig9/{name}/{engine}",
+                t.total_overlapped() * 1e6 / N_STEPS,
+                f"modeled_tpu vs_incore={ratio:.2f} "
+                f"(paper reports so2dr ~0.88-1.0x of incore)",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

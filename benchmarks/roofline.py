@@ -1,0 +1,72 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json and emits, per (arch x shape x mesh):
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+per-device memory, and the roofline fraction.  Also nominates the three
+hillclimb cells (worst fraction / most collective-bound / most
+paper-representative).
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load(art_dir=ART):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if not r.get("skipped") and "roofline" in r:
+            recs.append(r)
+    return recs
+
+
+def run():
+    rows = []
+    for r in load():
+        roof = r["roofline"]
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        dom = roof["dominant"]
+        frac = roof.get("roofline_fraction")
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        t_dom = roof[f"t_{dom}"]
+        derived = (
+            f"dom={dom} t_comp={roof['t_compute']:.4f} "
+            f"t_mem={roof['t_memory']:.4f} t_coll={roof['t_collective']:.4f} "
+            f"useful={roof.get('useful_ratio', 0):.3f} "
+            f"frac={frac if frac is None else round(frac, 5)} "
+            f"mem_GB={r['memory']['temp_size_in_bytes'] / 1e9:.2f}"
+        )
+        rows.append((name, t_dom * 1e6, derived))
+    return rows
+
+
+def markdown_table(art_dir=ART):
+    lines = [
+        "| arch | shape | mesh | t_compute | t_memory | t_coll | dominant "
+        "| useful | roofline-frac | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(art_dir):
+        roof = r["roofline"]
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        frac = roof.get("roofline_fraction")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {roof['t_compute']:.4f} | {roof['t_memory']:.4f} "
+            f"| {roof['t_collective']:.4f} | {roof['dominant']} "
+            f"| {roof.get('useful_ratio', 0):.3f} "
+            f"| {'' if frac is None else format(frac, '.5f')} "
+            f"| {r['memory']['temp_size_in_bytes'] / 1e9:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    emit(run())
+    print()
+    print(markdown_table())

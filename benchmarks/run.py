@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV.  Rows labeled ``measured_cpu``
+are wall-clock on this container; ``modeled`` rows evaluate the paper's
+Sec. III analytic model over exact TransferStats geometry with RTX-3080
+(paper-validation) or TPU-v5e (deployment-target) constants.  The
+roofline rows read the multi-pod dry-run artifacts if present.
+"""
+import sys
+
+
+def main() -> None:
+    from . import (
+        autotune_bench, fig5_config_sweep, fig6_so2dr_vs_resreu,
+        fig7_breakdown, fig8_single_step, fig9_incore_vs_oocore,
+        kernel_micro, roofline,
+    )
+    from .common import emit
+
+    print("name,us_per_call,derived")
+    for mod in (fig6_so2dr_vs_resreu, fig7_breakdown, fig5_config_sweep,
+                fig8_single_step, fig9_incore_vs_oocore, autotune_bench,
+                kernel_micro):
+        try:
+            emit(mod.run())
+        except Exception as e:  # keep the harness robust
+            print(f"{mod.__name__},0,ERROR {e}", file=sys.stdout)
+    try:
+        rows = roofline.run()
+        if rows:
+            emit(rows)
+        else:
+            print("roofline,0,no dry-run artifacts (run scripts/run_dryrun_all.sh)")
+    except Exception as e:
+        print(f"roofline,0,ERROR {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving example: prefill a prompt batch, then greedy-decode.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-130m --new 16
+
+Exercises the same prefill/decode_step closures the dry-run's decode
+shapes lower (ring-buffer KV for SWA archs, O(1) recurrent state for
+SSM/hybrid).
+"""
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_smoke_config
+from repro.models.api import build_model
+from repro.serve.decode import greedy_generate
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m", choices=ARCH_NAMES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["images"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.n_image_tokens, cfg.d_model)),
+            jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.n_frames, cfg.d_model)),
+            jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    toks = greedy_generate(model, params, batch, max_new=args.new,
+                           max_len=args.prompt_len + args.new)
+    dt = time.perf_counter() - t0
+    print(f"{cfg.name}: generated {args.new} tokens x {args.batch} seqs "
+          f"in {dt:.1f}s ({args.batch*args.new/dt:.1f} tok/s incl. compile)")
+    print(np.asarray(toks))
+
+
+if __name__ == "__main__":
+    main()

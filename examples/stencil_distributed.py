@@ -1,0 +1,42 @@
+"""L2 SO2DR: the paper's redundant-compute trade at the inter-chip level.
+
+Runs the shard_map ghost-cell-expansion stencil on 8 placeholder devices,
+sweeping k_ici and printing the collective-phase/byte trade (DESIGN.md §2).
+
+    PYTHONPATH=src python examples/stencil_distributed.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import collective_bytes_per_round, run_distributed
+from repro.core.reference import run_reference
+from repro.core.stencil import get_stencil
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    st = get_stencil("box2d1r")
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((256, 256)).astype(np.float32)
+    n = 8
+    ref = np.asarray(run_reference(jnp.asarray(x), st, n))
+    local = (x.shape[0] // 4, x.shape[1] // 2)
+
+    print(f"domain {x.shape} on mesh {dict(mesh.shape)} — {n} steps\n")
+    for k in (1, 2, 4, 8):
+        out = np.asarray(run_distributed(jnp.asarray(x), st.name, n, k, mesh))
+        err = np.abs(out - ref).max()
+        by = collective_bytes_per_round(local, st.radius, k, 4)
+        print(f"k_ici={k}:  max_err={err:.2e}  exchanges/step={4/k:.2f}  "
+              f"ICI bytes/step/rank={by/k:,.0f}")
+    print("\nk_ici trades a tiny byte overhead (corner term) for k x fewer "
+          "collective phases — SO2DR's trade, one level up.")
+
+
+if __name__ == "__main__":
+    main()

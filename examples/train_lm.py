@@ -1,0 +1,66 @@
+"""End-to-end LM training driver (example b: train a model for a few
+hundred steps on the synthetic pipeline).
+
+    PYTHONPATH=src python examples/train_lm.py --preset demo    # CPU, ~5 min
+    PYTHONPATH=src python examples/train_lm.py --preset 100m    # real hardware
+
+``demo`` is a ~6M-param qwen3-family model sized for this single-CPU
+container; ``100m`` is the ~100M-param config the assignment describes and
+uses the identical code path (swap of ArchConfig only) — on a TPU slice
+the launch layer shards it with launch/sharding.py.
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.data import DataSpec, SyntheticLM
+from repro.models.api import build_model
+from repro.optim import AdamW
+from repro.train import TrainConfig, Trainer
+
+PRESETS = {
+    "demo": ArchConfig(
+        name="qwen3-demo-6m", family="dense",
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_head=32,
+        d_ff=384, vocab=4096, qk_norm=True, tie_embeddings=True,
+    ),
+    "100m": ArchConfig(
+        name="qwen3-100m", family="dense",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+        d_ff=2048, vocab=32768, qk_norm=True, tie_embeddings=True,
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    model = build_model(cfg)
+    n_params = cfg.param_count()
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    data = SyntheticLM(DataSpec(vocab=cfg.vocab, seq_len=args.seq,
+                                global_batch=args.batch))
+    opt = AdamW(lr=6e-4, warmup_steps=args.steps // 20,
+                total_steps=args.steps)
+    tc = TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                     ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(model, opt, tc)
+    _, _, losses = trainer.run(jax.random.PRNGKey(0), data)
+    k = max(args.steps // 10, 1)
+    print(f"loss: {sum(losses[:k])/k:.3f} -> {sum(losses[-k:])/k:.3f} "
+          f"(first/last {k}-step mean)")
+
+
+if __name__ == "__main__":
+    main()

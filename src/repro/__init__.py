@@ -1,0 +1,1 @@
+"""repro: SO2DR on TPU — see README.md / DESIGN.md."""

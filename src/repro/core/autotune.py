@@ -1,0 +1,92 @@
+"""Automatic run-time configuration selection (the paper's future work).
+
+Sec. VII: "We also plan to refine the performance model which can be used
+to automatically select the optimization target between kernel execution
+and data transfer."  This module does exactly that: for a given stencil
+code and hardware it enumerates the Sec. IV-C feasible set, evaluates the
+Sec. III model over *exact* TransferStats geometry (accounting.py — no
+array allocation), and returns the best (engine, d, S_TB, k_on) with the
+predicted bottleneck.
+
+Because the model is evaluated per engine, the selector also answers the
+paper's Fig. 3a question ("which term should we optimize?") automatically:
+if the feasible set's best SO2DR config is transfer-bound, more TB steps
+are pointless and it says so.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional
+
+from .accounting import predict_stats
+from .analytic import EngineTimes, Hardware, model_times
+from .params import CodeSpec, feasible
+from .stencil import Stencil
+
+__all__ = ["Choice", "autotune", "optimization_target"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    engine: str
+    d: int
+    s_tb: int
+    k_on: int
+    time_s: float
+    bottleneck: str          # "transfer" | "kernel"
+    times: EngineTimes
+
+    @property
+    def config(self):
+        return dict(engine=self.engine, d=self.d, s_tb=self.s_tb, k_on=self.k_on)
+
+
+def _bottleneck(t: EngineTimes, n_streams: int) -> str:
+    return "transfer" if t.h2d + t.d2h >= t.kernel + t.odc else "kernel"
+
+
+def autotune(
+    st: Stencil,
+    sz: int,
+    n_steps: int,
+    hw: Hardware,
+    engines: Iterable[str] = ("so2dr", "resreu"),
+    d_grid: Iterable[int] = (4, 8, 16),
+    s_tb_grid: Iterable[int] = (20, 40, 80, 160, 320, 640),
+    k_on_grid: Iterable[int] = (1, 2, 4, 8),
+    b_elem: int = 4,
+) -> List[Choice]:
+    """Rank all feasible configs by modeled overlapped time (best first)."""
+    code = CodeSpec(sz=sz, radius=st.radius, b_elem=b_elem,
+                    total_steps=n_steps, n_arrays=2)
+    Y = X = sz + 2 * st.radius
+    out: List[Choice] = []
+    for engine in engines:
+        for d in d_grid:
+            for s_tb in s_tb_grid:
+                if s_tb > n_steps or not feasible(code, hw, d, s_tb):
+                    continue
+                k_ons = (1,) if engine == "resreu" else k_on_grid
+                for k_on in k_ons:
+                    try:
+                        stats = predict_stats(engine, st, Y, X, n_steps,
+                                              d, s_tb, k_on, b_elem)
+                    except ValueError:
+                        continue
+                    t = model_times(stats, hw)
+                    out.append(Choice(
+                        engine=engine, d=d, s_tb=s_tb, k_on=k_on,
+                        time_s=t.total_overlapped(hw.n_streams),
+                        bottleneck=_bottleneck(t, hw.n_streams),
+                        times=t,
+                    ))
+    out.sort(key=lambda c: c.time_s)
+    return out
+
+
+def optimization_target(st: Stencil, sz: int, n_steps: int,
+                        hw: Hardware) -> Optional[str]:
+    """The paper's Fig. 3a decision, automated: what should be optimized
+    next for the *best* config — 'kernel' or 'transfer'?"""
+    ranked = autotune(st, sz, n_steps, hw)
+    return ranked[0].bottleneck if ranked else None

@@ -1,0 +1,82 @@
+"""Pure-jnp oracle for stencil computation.
+
+This is the ground truth every engine and kernel is validated against.  It
+uses the interior-update convention: the ``r``-wide frame is Dirichlet
+(constant in time); only interior elements update.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .stencil import Stencil, get_stencil
+
+__all__ = [
+    "step_domain",
+    "run_reference",
+    "step_band",
+    "multi_step_band",
+]
+
+
+def step_domain(x: jnp.ndarray, st: Stencil) -> jnp.ndarray:
+    """One time step on the full framed domain: (Y, X) -> (Y, X)."""
+    r = st.radius
+    return x.at[..., r:-r, r:-r].set(st.step_valid(x))
+
+
+@functools.partial(jax.jit, static_argnames=("name", "n"))
+def _run_reference_jit(x: jnp.ndarray, name: str, n: int) -> jnp.ndarray:
+    st = get_stencil(name)
+    return jax.lax.fori_loop(0, n, lambda _, a: step_domain(a, st), x)
+
+
+def run_reference(x: jnp.ndarray, st: Stencil, n: int) -> jnp.ndarray:
+    """n reference time steps on the framed domain."""
+    return _run_reference_jit(x, st.name, n)
+
+
+def step_band(
+    band: jnp.ndarray, st: Stencil, keep_top: bool, keep_bottom: bool
+) -> jnp.ndarray:
+    """One step on a horizontal band of rows.
+
+    ``band`` is (H, X) — full domain width (left/right frame columns
+    included), an arbitrary contiguous row range.  The output covers the rows
+    whose update is computable, i.e. the band shrinks by ``r`` rows at each
+    side unless that side is the domain frame (``keep_*``), in which case the
+    frame rows are passed through unchanged.
+
+    output height = H - 2r + (keep_top + keep_bottom) * r
+    """
+    r = st.radius
+    h = band.shape[0]
+    interior = band[r : h - r].at[:, r:-r].set(st.step_valid(band))
+    parts = []
+    if keep_top:
+        parts.append(band[:r])
+    parts.append(interior)
+    if keep_bottom:
+        parts.append(band[h - r :])
+    return jnp.concatenate(parts, axis=0) if len(parts) > 1 else interior
+
+
+@functools.partial(jax.jit, static_argnames=("name", "steps", "keep_top", "keep_bottom"))
+def multi_step_band(
+    band: jnp.ndarray,
+    name: str,
+    steps: int,
+    keep_top: bool = False,
+    keep_bottom: bool = False,
+) -> jnp.ndarray:
+    """``steps`` fused time steps on a band (compute area shrinks r/step).
+
+    This is the *reference* for the fused k_on-step kernel: the Pallas
+    implementation in :mod:`repro.kernels` must match it.
+    """
+    st = get_stencil(name)
+    for _ in range(steps):
+        band = step_band(band, st, keep_top, keep_bottom)
+    return band

@@ -1,0 +1,170 @@
+"""Stencil definitions.
+
+A :class:`Stencil` is the computing template of the paper (Sec. II-A): every
+interior element is updated from its neighbours within ``radius``.  The
+registry mirrors the paper's benchmark suite (Table III):
+
+* ``box2d{1,2,3,4}r`` — box-type, ``(2x+1)**2`` points, arithmetic intensity
+  ``2*(2x+1)**2 - 1`` FLOPs/element,
+* ``gradient2d``      — star-type, 5 points, 19 FLOPs/element (nonlinear),
+* ``star2d{1..4}r``   — star-type axis-only stencils (extra, used in tests).
+
+All stencils use the *interior-update* convention: an ``r``-wide Dirichlet
+frame around the domain is held constant; only interior elements are updated.
+The oracle in :mod:`repro.core.reference` and every out-of-core engine in
+:mod:`repro.core.oocore` share this convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Stencil", "get_stencil", "REGISTRY", "box_coeffs"]
+
+
+def box_coeffs(radius: int) -> np.ndarray:
+    """Deterministic, non-separable, sum-to-one box coefficients.
+
+    Distinct per-tap weights rule out accidental separable shortcuts in
+    optimized kernels while keeping iterates bounded (weights sum to 1).
+    """
+    n = 2 * radius + 1
+    iy, ix = np.mgrid[0:n, 0:n]
+    w = 1.0 + 0.1 * iy + 0.01 * ix + 0.003 * iy * ix  # non-separable
+    return (w / w.sum()).astype(np.float64)
+
+
+def star_coeffs(radius: int) -> np.ndarray:
+    """Axis-only (star) coefficients embedded in a (2r+1)x(2r+1) grid."""
+    n = 2 * radius + 1
+    c = np.zeros((n, n))
+    for k in range(1, radius + 1):
+        c[radius + k, radius] = c[radius - k, radius] = 0.35 / (2 * k * radius)
+        c[radius, radius + k] = c[radius, radius - k] = 0.4 / (2 * k * radius)
+    c[radius, radius] = 1.0 - c.sum()
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class Stencil:
+    """A 2-D stencil template.
+
+    ``step_valid`` maps an ``(H, W)`` array to the ``(H-2r, W-2r)`` "valid"
+    region — the kernel-level primitive everything else is built from.
+    """
+
+    name: str
+    radius: int
+    kind: str                    # "box" | "star" | "gradient"
+    flops_per_elem: int          # arithmetic intensity (paper Table III)
+    points: int                  # taps read per output element
+    _step_valid: Callable[[jnp.ndarray], jnp.ndarray]
+    coeffs: np.ndarray | None = None   # (2r+1, 2r+1) for linear stencils
+
+    def step_valid(self, x: jnp.ndarray) -> jnp.ndarray:
+        """One time step on the valid interior: (H, W) -> (H-2r, W-2r)."""
+        return self._step_valid(x)
+
+    @property
+    def is_linear(self) -> bool:
+        return self.coeffs is not None
+
+
+def _linear_step(coeffs: np.ndarray) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    n = coeffs.shape[0]
+    taps = [
+        (dy, dx, float(coeffs[dy, dx]))
+        for dy in range(n)
+        for dx in range(n)
+        if coeffs[dy, dx] != 0.0
+    ]
+
+    def step(x: jnp.ndarray) -> jnp.ndarray:
+        h, w = x.shape[-2], x.shape[-1]
+        acc = None
+        for dy, dx, c in taps:
+            sl = x[..., dy : h - (n - 1) + dy, dx : w - (n - 1) + dx]
+            term = jnp.asarray(c, x.dtype) * sl
+            acc = term if acc is None else acc + term
+        return acc
+
+    return step
+
+
+def _gradient_step(x: jnp.ndarray) -> jnp.ndarray:
+    """5-point nonlinear gradient stencil (19 FLOPs/element).
+
+    c + dt * (gn+gs+gw+ge) / sqrt(eps + gn^2+gs^2+gw^2+ge^2)  with
+    g* the one-sided differences — an anisotropic-diffusion style update.
+    """
+    c = x[..., 1:-1, 1:-1]
+    gn = x[..., :-2, 1:-1] - c
+    gs = x[..., 2:, 1:-1] - c
+    gw = x[..., 1:-1, :-2] - c
+    ge = x[..., 1:-1, 2:] - c
+    num = gn + gs + gw + ge
+    den = gn * gn + gs * gs + gw * gw + ge * ge
+    eps = jnp.asarray(1e-3, x.dtype)
+    dt = jnp.asarray(0.1, x.dtype)
+    return c + dt * num * jax_rsqrt(den + eps)
+
+
+def jax_rsqrt(v: jnp.ndarray) -> jnp.ndarray:
+    import jax
+
+    return jax.lax.rsqrt(v)
+
+
+def _make_box(radius: int) -> Stencil:
+    c = box_coeffs(radius)
+    pts = (2 * radius + 1) ** 2
+    return Stencil(
+        name=f"box2d{radius}r",
+        radius=radius,
+        kind="box",
+        flops_per_elem=2 * pts - 1,
+        points=pts,
+        _step_valid=_linear_step(c),
+        coeffs=c,
+    )
+
+
+def _make_star(radius: int) -> Stencil:
+    c = star_coeffs(radius)
+    pts = 4 * radius + 1
+    return Stencil(
+        name=f"star2d{radius}r",
+        radius=radius,
+        kind="star",
+        flops_per_elem=2 * pts - 1,
+        points=pts,
+        _step_valid=_linear_step(c),
+        coeffs=c,
+    )
+
+
+REGISTRY: Dict[str, Stencil] = {}
+for _r in (1, 2, 3, 4):
+    REGISTRY[f"box2d{_r}r"] = _make_box(_r)
+    REGISTRY[f"star2d{_r}r"] = _make_star(_r)
+REGISTRY["gradient2d"] = Stencil(
+    name="gradient2d",
+    radius=1,
+    kind="gradient",
+    flops_per_elem=19,
+    points=5,
+    _step_valid=_gradient_step,
+    coeffs=None,
+)
+
+PAPER_BENCHMARKS = ("box2d1r", "box2d2r", "box2d3r", "box2d4r", "gradient2d")
+
+
+def get_stencil(name: str) -> Stencil:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown stencil {name!r}; known: {sorted(REGISTRY)}")

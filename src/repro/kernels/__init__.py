@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spot.
+
+* stencil_multistep     — k_on-step fused kernel (VMEM-resident steps)
+* stencil_multistep_db  — + DMA/compute overlap (double buffering)
+* stencil_banded_mxu    — beyond-paper MXU recast for high radii
+* ops                   — jit'd wrappers;  ref — pure-jnp oracles
+"""

@@ -1,0 +1,170 @@
+"""MXU-banded fused stencil kernel (beyond-paper, EXPERIMENTS.md §4.3).
+
+On v5e the VPU (3.9 TFLOP/s fp32) makes high-radius box stencils
+compute-bound at a single step (DESIGN.md §2), killing the paper's fusion
+win for box2d3r/4r.  This kernel re-casts each time step of a *linear*
+stencil as ``(2r+1)`` banded matmuls that run on the 197 TFLOP/s MXU:
+
+    out = sum_dy  shift_dy(tile) @ B_dy,     B_dy[x+dx, x] = c[dy, dx]
+
+Efficiency per output element = (2r+1) · 2 · (TX + 2r) MXU-flops vs
+``2(2r+1)^2`` VPU-flops.  With TX = 128 (MXU-native) the MXU path wins
+when  (2r+1)·2·(TX+2r)/197e12  <  2(2r+1)^2/3.9e12, i.e. radius >= 3:
+box2d4r 2448/197T = 12.4 ps vs 161/3.9T = 41 ps  (~3.3x).
+
+Same masked in-place centre-update validity scheme as
+``stencil_multistep.py``; identical band semantics; oracle-validated in
+interpret mode (`tests/test_kernels.py::test_banded_mxu_kernel`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.stencil import Stencil, get_stencil
+
+__all__ = ["banded_fused_stencil", "mxu_wins"]
+
+DEFAULT_TILE = (256, 128)  # lane dim 128 = MXU-native
+
+
+def mxu_wins(st: Stencil, tx: int = 128,
+             vpu: float = 3.9e12, mxu: float = 197e12) -> bool:
+    """Napkin check: does the banded-MXU recast beat the VPU path?"""
+    if not st.is_linear:
+        return False
+    n = 2 * st.radius + 1
+    t_mxu = n * 2 * (tx + 2 * st.radius) / mxu
+    t_vpu = st.flops_per_elem / vpu
+    return t_mxu < t_vpu
+
+
+def _band_matrices(st: Stencil, tx: int) -> np.ndarray:
+    """(2r+1, TX+2r, TX) banded matrices, one per row offset dy."""
+    r = st.radius
+    n = 2 * r + 1
+    out = np.zeros((n, tx + 2 * r, tx), np.float32)
+    for dy in range(n):
+        for dx in range(n):
+            c = float(st.coeffs[dy, dx])
+            for x in range(tx):
+                out[dy, x + dx, x] = c
+    return out
+
+
+def _kernel(x_hbm, bands_ref, o_ref, tile, sem, *, st, steps, keep_top,
+            keep_bottom, H, X, Hp, Xp, TY, TX):
+    r = st.radius
+    m = steps
+    n = 2 * r + 1
+    TH, TW = TY + 2 * m * r, TX + 2 * m * r
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    oy = i * TY + (0 if keep_top else m * r)
+    ox = j * TX
+    sy = jnp.clip(oy - m * r, 0, Hp - TH)
+    sx = jnp.clip(ox - m * r, 0, Xp - TW)
+    copy = pltpu.make_async_copy(
+        x_hbm.at[pl.ds(sy, TH), pl.ds(sx, TW)], tile, sem
+    )
+    copy.start()
+    copy.wait()
+    t = tile[...]
+
+    grow = sy + jax.lax.broadcasted_iota(jnp.int32, (TH, TW), 0)
+    gcol = sx + jax.lax.broadcasted_iota(jnp.int32, (TH, TW), 1)
+    updatable = (gcol >= r) & (gcol < X - r)
+    if keep_top:
+        updatable &= grow >= r
+    if keep_bottom:
+        updatable &= grow < H - r
+
+    bands = bands_ref[...]
+    for s in range(m):
+        # centre via (2r+1) banded matmuls on the MXU; band matrices map
+        # the full tile width TW onto the centre TW - 2r
+        acc = None
+        for dy in range(n):
+            rows = t[dy : TH - (n - 1) + dy, :]          # (TH-2r, TW)
+            term = jnp.dot(rows, bands[dy].astype(t.dtype),
+                           preferred_element_type=jnp.float32)
+            acc = term if acc is None else acc + term
+        upd = t.at[r:-r, r:-r].set(acc.astype(t.dtype))
+        t = jnp.where(updatable, upd, t)
+    out = jax.lax.dynamic_slice(t, (oy - sy, ox - sx), (TY, TX))
+    o_ref[...] = out
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("name", "steps", "keep_top", "keep_bottom", "tile", "interpret"),
+)
+def banded_fused_stencil(
+    band: jnp.ndarray,
+    name: str,
+    steps: int,
+    keep_top: bool = False,
+    keep_bottom: bool = False,
+    tile: Tuple[int, int] = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Drop-in alternative to ``fused_stencil_band`` for linear stencils."""
+    st = get_stencil(name)
+    if not st.is_linear:
+        raise ValueError(f"{name} is nonlinear; banded-MXU path needs coeffs")
+    r, m = st.radius, steps
+    H, X = band.shape
+    h_out = H - 2 * m * r + (int(keep_top) + int(keep_bottom)) * m * r
+    if h_out <= 0:
+        raise ValueError(f"band of {H} rows too small for {m} fused steps")
+
+    ty = min(tile[0], h_out)
+    tx = min(tile[1], X)
+    if H < ty + 2 * m * r or X < tx + 2 * m * r:
+        from repro.core.reference import multi_step_band
+
+        return multi_step_band(band, name, steps, keep_top, keep_bottom)
+
+    grid = (_ceil_div(h_out, ty), _ceil_div(X, tx))
+    hp_out, xp_out = grid[0] * ty, grid[1] * tx
+    pad_y, pad_x = hp_out - h_out, xp_out - X
+    Hp, Xp = H + pad_y, X + pad_x
+    if pad_y or pad_x:
+        band = jnp.pad(band, ((0, pad_y), (0, pad_x)))
+
+    # band matrices: (n, TW, TW-2r) — full tile width in, centre width out,
+    # passed as a (small) VMEM-resident input replicated to every tile
+    tw = tx + 2 * m * r
+    bands = jnp.asarray(_band_matrices(st, tw - 2 * r))
+
+    kern = functools.partial(
+        _kernel, st=st, steps=m, keep_top=keep_top,
+        keep_bottom=keep_bottom, H=H, X=X, Hp=Hp, Xp=Xp, TY=ty, TX=tx,
+    )
+    n = 2 * r + 1
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((n, tw, tw - 2 * r), lambda i, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ty, tx), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((hp_out, xp_out), band.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((ty + 2 * m * r, tx + 2 * m * r), band.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(band, bands)
+    return out[:h_out, :X]

@@ -1,0 +1,65 @@
+"""HLO-text collective accounting for the roofline's third term.
+
+``cost_analysis`` does not expose collective bytes, so we parse the
+compiled HLO module: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction's
+*result* size is summed per op kind.  (Result size is the standard proxy:
+for all-gather it's the gathered bytes each device receives; for
+all-reduce the reduced tensor crosses links ~2x in a ring — the roofline
+multiplies by the per-op ring factor.)
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "RING_FACTORS"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+# bytes-on-wire multiplier for ring algorithms, relative to result bytes
+RING_FACTORS = {
+    "all-gather": 1.0,        # each device receives ~result bytes
+    "all-reduce": 2.0,        # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_ARRAY_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _array_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes of every collective in an HLO module dump."""
+    out: Dict[str, int] = {op: 0 for op in _OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _OPS:
+            # "%x = TYPE op-name(" — the `op-name(` or `op-name-start(` form
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                lhs = stripped.split(f" {op}", 1)[0]
+                if "=" not in lhs:
+                    continue
+                rtype = lhs.split("=", 1)[1]
+                out[op] += sum(_array_bytes(m) for m in _ARRAY_RE.finditer(rtype))
+                break
+    return out

@@ -1,0 +1,382 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first two lines above: jax locks the device count on first
+init, and the dry-run (and only the dry-run) needs 512 placeholder
+devices for the production meshes.
+
+For each cell we build the real jitted program (full train_step with
+optimizer update, or serve prefill/decode step), lower it against
+ShapeDtypeStruct stand-ins (no allocation), compile, and record:
+
+* ``memory_analysis()``  — per-device bytes (proves the cell fits),
+* ``cost_analysis()``    — per-device HLO FLOPs + bytes accessed,
+* collective bytes per op kind parsed from the compiled HLO,
+* analytic MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) for the
+  useful-compute ratio.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --stencil          # L2 stencil cells
+
+Artifacts: one JSON per cell under --out (default artifacts/dryrun/).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCH_NAMES, SHAPES, cell_supported, get_config, input_specs,
+)
+from repro.models.api import build_model
+from repro.optim import AdamW
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .sharding import batch_specs, cache_specs, named, opt_specs, param_specs
+
+MXU_PEAK = 197e12         # bf16 FLOP/s per chip (assignment constant)
+VPU_PEAK = 3.9e12         # fp32 vector FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+def _mem_stats(compiled):
+    ma = compiled.memory_analysis()
+    return {
+        k: int(getattr(ma, k))
+        for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        )
+    }
+
+
+def _cost_stats(compiled):
+    ca = compiled.cost_analysis()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+
+def _roofline(cost, colls, n_chips, seq_tokens, model_flops):
+    """Three roofline terms (seconds, per step) + dominant bottleneck."""
+    t_compute = cost["flops"] / MXU_PEAK           # per-device flops already
+    t_memory = cost["bytes_accessed"] / HBM_BW
+    wire = sum(
+        colls[k] * f for k, f in
+        (("all-gather", 1.0), ("all-reduce", 2.0), ("reduce-scatter", 1.0),
+         ("all-to-all", 1.0), ("collective-permute", 1.0))
+    )
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    useful = model_flops / n_chips
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "dominant": dom,
+        "model_flops_per_chip": useful,
+        "useful_ratio": (useful / cost["flops"]) if cost["flops"] else 0.0,
+        "roofline_fraction": (useful / MXU_PEAK) / max(
+            max(terms.values()), 1e-30
+        ),
+    }
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               constrain_acts: bool = True, attn_seq_shard: bool = False,
+               seq_shard_acts: bool = False, moe_block_dispatch: bool = False,
+               moe_shard_map: bool = False, microbatches: int = 1):
+    """Build, lower and compile one (arch x shape x mesh) cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda: model.init_params(key))
+    pspecs = param_specs(cfg, params_shape, mesh)
+    specs_in = input_specs(cfg, shape)
+
+    # anchor (B, S, D) activations: batch over the data axes (pure GSPMD
+    # propagation replicates batch — measured as "iter0" in §Perf)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.layers import (
+        set_activation_sharding, set_attention_sharding,
+    )
+    from .mesh import data_axes
+    dp = data_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if constrain_acts and shape.global_batch % n_dp == 0:
+        if seq_shard_acts:
+            # Megatron-SP style: residual stream sequence-sharded over
+            # "model" between blocks (norms/projections are per-token)
+            set_activation_sharding(NamedSharding(mesh, P(dp, "model", None)))
+        else:
+            set_activation_sharding(NamedSharding(mesh, P(dp, None, None)))
+    else:
+        set_activation_sharding(None)
+    if attn_seq_shard and shape.global_batch % n_dp == 0:
+        # §Perf: q-chunk axis of chunked attention sharded over "model"
+        nq = mesh.shape["model"]
+        set_attention_sharding(
+            NamedSharding(mesh, P("model", dp, None, None, None, None)), nq
+        )
+    else:
+        set_attention_sharding(None, None)
+    from repro.models.moe import set_moe_block_dispatch, set_moe_shard_map
+    if moe_shard_map and shape.global_batch % n_dp == 0:
+        set_moe_shard_map(mesh, dp if len(dp) > 1 else dp[0])
+    else:
+        set_moe_shard_map(None, None)
+    if moe_block_dispatch and shape.global_batch % n_dp == 0:
+        # §Perf: per-data-shard MoE dispatch (shard-local capacity).
+        # (gather-at-use weight constraints were tried and REFUTED —
+        # EXPERIMENTS.md §Perf mixtral iter2; F-dim FSDP+TP in
+        # launch/sharding.py is the fix that survived.)
+        set_moe_block_dispatch(
+            n_dp, NamedSharding(mesh, P(dp, None, None))
+        )
+    else:
+        set_moe_block_dispatch(None, None)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(moment_dtype=jnp.bfloat16)
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            ospecs = opt_specs(pspecs)
+            bspecs = batch_specs(cfg, shape, specs_in, mesh)
+
+            def step(params, opt_state, batch):
+                if microbatches > 1:
+                    # grad accumulation: live activations shrink ~1/mb
+                    def split(x):
+                        b = x.shape[0]
+                        return x.reshape(microbatches, b // microbatches,
+                                         *x.shape[1:])
+
+                    micro = jax.tree.map(split, batch)
+
+                    def acc(carry, mb):
+                        g_acc, l_acc = carry
+                        l, g = jax.value_and_grad(model.loss)(params, mb)
+                        return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    (g, l), _ = jax.lax.scan(acc, (zeros, 0.0), micro)
+                    g = jax.tree.map(lambda x: x / microbatches, g)
+                    loss = l / microbatches
+                else:
+                    loss, g = jax.value_and_grad(model.loss)(params, batch)
+                params, opt_state = opt.update(g, opt_state, params)
+                return params, opt_state, loss
+
+            fn = jax.jit(
+                step,
+                in_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                              named(mesh, bspecs)),
+                out_shardings=(named(mesh, pspecs), named(mesh, ospecs), None),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(params_shape, opt_shape, specs_in)
+            step_tokens = shape.global_batch * list(specs_in.values())[0].shape[1]
+            flops_mult = 3  # fwd + bwd ~= 3x forward matmul flops
+        elif shape.kind == "prefill":
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = cache_specs(cfg, shape, cache_shape, mesh)
+            bspecs = batch_specs(cfg, shape, specs_in, mesh)
+
+            def prefill(params, batch, cache):
+                return model.prefill(params, batch, cache)
+
+            fn = jax.jit(
+                prefill,
+                in_shardings=(named(mesh, pspecs), named(mesh, bspecs),
+                              named(mesh, cspecs)),
+                out_shardings=(None, named(mesh, cspecs)),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(params_shape, specs_in, cache_shape)
+            step_tokens = shape.global_batch * specs_in["tokens"].shape[1]
+            flops_mult = 1
+        else:  # decode
+            cache_shape = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len)
+            )
+            cspecs = cache_specs(cfg, shape, cache_shape, mesh)
+            tok = specs_in["token"]
+            tspec = batch_specs(cfg, shape, {"token": tok}, mesh)["token"]
+
+            def decode(params, token, pos, cache):
+                return model.decode_step(params, token, pos, cache)
+
+            fn = jax.jit(
+                decode,
+                in_shardings=(named(mesh, pspecs), named(mesh, tspec), None,
+                              named(mesh, cspecs)),
+                out_shardings=(None, named(mesh, cspecs)),
+                donate_argnums=(3,),
+            )
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = fn.lower(params_shape, tok, pos, cache_shape)
+            step_tokens = shape.global_batch  # one token per sequence
+            flops_mult = 1
+
+        compiled = lowered.compile()
+    set_activation_sharding(None)
+    set_attention_sharding(None, None)
+    set_moe_block_dispatch(None, None)
+    set_moe_shard_map(None, None)
+
+    n_chips = mesh.devices.size
+    hlo_text = compiled.as_text()
+    hc = analyze_hlo(hlo_text)  # trip-count-aware (see hlo_analysis.py)
+    cost = {"flops": hc.flops, "bytes_accessed": hc.bytes}
+    colls = {k: int(v) for k, v in hc.collectives.items()}
+    raw = _cost_stats(compiled)       # XLA's own numbers, for reference
+    mem = _mem_stats(compiled)
+    model_flops = flops_mult * 2 * cfg.active_param_count() * step_tokens
+    roof = _roofline(cost, colls, n_chips, step_tokens, model_flops)
+    return {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "skipped": False, "n_chips": n_chips,
+        "compile_s": round(time.time() - t0, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "step_tokens": step_tokens,
+        "memory": mem, "cost": cost, "cost_xla_raw": raw,
+        "collectives": colls,
+        "roofline": roof,
+    }
+
+
+def lower_stencil(multi_pod: bool, name: str = "box2d1r", k_ici: int = 8,
+                  Y: int = 65536, X: int = 32768):
+    """Dry-run the L2 distributed stencil on the production mesh."""
+    from repro.core.distributed import distributed_stencil_step_fn
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    row = "data"
+    col = "model"
+    # fold the pod axis into rows by treating ("pod","data") as rows
+    if multi_pod:
+        Yl = Y * 2
+    else:
+        Yl = Y
+    fn = distributed_stencil_step_fn(name, k_ici, k_ici, mesh, row, col)
+    x = jax.ShapeDtypeStruct((Yl, X), jnp.float32)
+    t0 = time.time()
+    with mesh:
+        lowered = fn.lower(x)
+        compiled = lowered.compile()
+    hc = analyze_hlo(compiled.as_text())
+    cost = {"flops": hc.flops, "bytes_accessed": hc.bytes}
+    colls = {k: int(v) for k, v in hc.collectives.items()}
+    mem = _mem_stats(compiled)
+    t_comp = cost["flops"] / VPU_PEAK  # stencils are VPU work
+    t_mem = cost["bytes_accessed"] / HBM_BW
+    t_coll = colls["collective-permute"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    return {
+        "arch": f"stencil-{name}-k{k_ici}", "shape": f"{Yl}x{X}",
+        "multi_pod": multi_pod, "skipped": False,
+        "n_chips": mesh.devices.size,
+        "compile_s": round(time.time() - t0, 1),
+        "memory": mem, "cost": cost, "collectives": colls,
+        "roofline": {
+            **{f"t_{k}": v for k, v in terms.items()},
+            "dominant": max(terms, key=terms.get),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--stencil", action="store_true")
+    ap.add_argument("--k-ici", type=int, default=8)
+    ap.add_argument("--no-act-constraint", action="store_true",
+                    help="pure-propagation baseline (perf iter0)")
+    ap.add_argument("--attn-seq-shard", action="store_true",
+                    help="sequence-sharded attention (perf iteration)")
+    ap.add_argument("--seq-shard-acts", action="store_true",
+                    help="sequence-sharded residual stream (Megatron-SP)")
+    ap.add_argument("--moe-block-dispatch", action="store_true",
+                    help="per-data-shard MoE dispatch (perf iteration)")
+    ap.add_argument("--moe-shard-map", action="store_true",
+                    help="explicit-collective shard_map MoE (perf iteration)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="grad-accumulation microbatches for train cells")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    jobs = []
+    if args.stencil:
+        for mp in meshes:
+            jobs.append(("stencil", None, mp))
+    else:
+        archs = [args.arch] if args.arch else list(ARCH_NAMES)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        for a in archs:
+            for s in shapes:
+                for mp in meshes:
+                    jobs.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in jobs:
+        tag = f"{a}__{s}__{'pod2' if mp else 'pod1'}"
+        try:
+            if a == "stencil":
+                rec = lower_stencil(mp, k_ici=args.k_ici)
+                tag = f"{rec['arch']}__{'pod2' if mp else 'pod1'}"
+            else:
+                rec = lower_cell(a, s, mp,
+                                 constrain_acts=not args.no_act_constraint,
+                                 attn_seq_shard=args.attn_seq_shard,
+                                 seq_shard_acts=args.seq_shard_acts,
+                                 moe_block_dispatch=args.moe_block_dispatch,
+                                 moe_shard_map=args.moe_shard_map,
+                                 microbatches=args.microbatches)
+            status = "SKIP" if rec.get("skipped") else "OK"
+            extra = rec.get("reason", "") if rec.get("skipped") else (
+                f"compile={rec['compile_s']}s dom={rec['roofline']['dominant']}"
+            )
+            print(f"{status:4s} {tag}  {extra}", flush=True)
+        except Exception as e:  # a failure here is a bug in the system
+            failures += 1
+            rec = {"arch": a, "shape": s, "multi_pod": mp, "error": str(e),
+                   "traceback": traceback.format_exc()}
+            print(f"FAIL {tag}  {e}", flush=True)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    print(f"done: {len(jobs) - failures}/{len(jobs)} cells OK")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

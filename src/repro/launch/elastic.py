@@ -1,0 +1,31 @@
+"""Elastic re-planning: reshard a checkpoint onto a different mesh.
+
+At 1000+ nodes, slices come and go; a framework must restart on whatever
+device count is healthy.  Because checkpoints store full (unsharded)
+arrays and shardings are *derived* (param_specs is a pure function of
+config + mesh), elasticity reduces to: rebuild the mesh, re-derive specs,
+device_put the restored leaves.  ``replan`` returns the new shardings;
+``tests/test_elastic.py`` exercises a 4-device -> 2-device restart in a
+subprocess.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from .sharding import named, param_specs
+
+__all__ = ["replan", "reshard_restored"]
+
+
+def replan(cfg: ArchConfig, params_shape: Any, mesh) -> Any:
+    """Derive shardings for an arbitrary (possibly new) mesh."""
+    return named(mesh, param_specs(cfg, params_shape, mesh))
+
+
+def reshard_restored(restored: Any, shardings: Any) -> Any:
+    """Place host (numpy) leaves from CheckpointManager.restore onto the
+    new mesh."""
+    return jax.tree.map(jax.device_put, restored, shardings)

@@ -1,0 +1,171 @@
+"""Per-architecture parameter / optimizer / batch / cache sharding rules.
+
+Strategy (GSPMD, pjit): FSDP (weights sharded over the data axes, ZeRO-3)
+x TP (d_ff / head / vocab dims over "model") x EP (experts over "model"
+when E >= |model|).  Optimizer moments mirror parameter specs.  KV caches
+shard batch over data and kv-heads over "model" — with divisibility-aware
+fallbacks (cache length = split-KV decode, then head_dim) because jax
+requires dims to divide evenly by their shard count; ragged vocabularies
+(50280, 51865, ...) fall back from vocab- to d_model-sharding the same
+way.
+
+The rules are path-keyed (leaf name + rank) so one function covers all six
+model families without coupling model code to meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from .mesh import data_axes
+
+__all__ = [
+    "param_specs", "batch_specs", "cache_specs", "named", "opt_specs",
+]
+
+
+def _key_name(k) -> str:
+    return getattr(k, "key", getattr(k, "name", str(k)))
+
+
+def _axis_size(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _assign(mesh, shape: Sequence[int],
+            wants: List[Tuple[int, Any]]) -> P:
+    """Build a PartitionSpec assigning each (dim, axis) in priority order,
+    skipping assignments whose dim doesn't divide or whose axis/dim is
+    already taken."""
+    spec: List[Any] = [None] * len(shape)
+    used = set()
+    for dim, axis in wants:
+        if dim < 0:
+            dim += len(shape)
+        if dim >= len(shape) or spec[dim] is not None:
+            continue
+        key = tuple(axis) if isinstance(axis, tuple) else (axis,)
+        if any(a in used for a in key):
+            continue
+        if shape[dim] % _axis_size(mesh, axis) != 0 or shape[dim] == 0:
+            continue
+        spec[dim] = axis
+        used.update(key)
+    return P(*spec)
+
+
+def param_specs(cfg: ArchConfig, params_shape, mesh) -> Any:
+    dp = data_axes(mesh)
+    fsdp = dp[-1]  # shard weights over "data" (pod axis pure DP for weights)
+    M = "model"
+    ep = cfg.n_experts >= mesh.shape[M]
+
+    def rule(path, leaf):
+        names = [_key_name(k) for k in path]
+        name = names[-1]
+        shape = leaf.shape
+        r = len(shape)
+        if name == "embed":                       # (V, D)
+            return _assign(mesh, shape, [(0, M), (1, fsdp), (1, M)])
+        if name == "head":                        # (D, V)
+            return _assign(mesh, shape, [(1, M), (0, fsdp), (0, M)])
+        if name == "router":                      # (..., D, E)
+            return _assign(mesh, shape, [(r - 2, fsdp)])
+        if name in ("w_gate", "w_up") and r >= 4 and "moe" in names:
+            if ep:                                # (S, E, D, F)
+                return _assign(mesh, shape, [(r - 3, M), (r - 2, fsdp)])
+            return _assign(mesh, shape, [(r - 1, M), (r - 2, fsdp)])
+        if name == "w_down" and r >= 4 and "moe" in names:
+            if ep:                                # (S, E, F, D)
+                return _assign(mesh, shape, [(r - 3, M), (r - 1, fsdp)])
+            return _assign(mesh, shape, [(r - 2, M), (r - 1, fsdp)])
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+            # (..., D, F): TP on the output dim, FSDP on the input dim
+            return _assign(mesh, shape,
+                           [(r - 1, M), (r - 2, fsdp), (r - 2, M)])
+        if name in ("wo", "w_down", "out_proj"):
+            return _assign(mesh, shape,
+                           [(r - 2, M), (r - 1, fsdp), (r - 1, M)])
+        if name in ("conv_w", "conv_b"):          # (..., w, Cdim)
+            return _assign(mesh, shape, [(r - 1, M)])
+        return P()  # norms, gates, dt_bias, A_log, D — replicated
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_specs(pspecs):
+    """Optimizer state mirrors parameter sharding; step is replicated."""
+    from repro.optim import OptState
+    return OptState(step=P(), mu=pspecs, nu=pspecs)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, batch_shape, mesh):
+    dp = data_axes(mesh)
+    n_dp = _axis_size(mesh, tuple(dp))
+
+    def rule(path, leaf):
+        name = _key_name(path[-1])
+        s = leaf.shape
+        if not s or s[0] % n_dp:
+            return P()
+        if name in ("tokens", "labels", "token"):
+            return P(dp, *([None] * (len(s) - 1)))
+        if name in ("images", "frames"):
+            return _assign(mesh, s, [(0, dp), (2, "model")])
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, cache_shape, mesh):
+    dp = data_axes(mesh)
+    n_dp = _axis_size(mesh, tuple(dp))
+    M = "model"
+
+    def rule(path, leaf):
+        names = [_key_name(k) for k in path]
+        name = names[-1]
+        s = leaf.shape
+        r = len(s)
+        if name in ("k", "v"):
+            # (..., B, L, G, hd): batch over dp; model over kv-heads,
+            # falling back to cache length (split-KV) then head_dim
+            b_dim, l_dim, g_dim, h_dim = r - 4, r - 3, r - 2, r - 1
+            wants = []
+            if s[b_dim] % n_dp == 0 and s[b_dim] >= n_dp:
+                wants.append((b_dim, dp))
+            else:
+                # batch too small (e.g. long_500k B=1): split cache length
+                wants.append((l_dim, dp))
+            wants += [(g_dim, M), (l_dim, M), (h_dim, M)]
+            return _assign(mesh, s, wants)
+        if name == "ssm":
+            # (..., B, H, P, N)
+            b_dim, h_dim, p_dim = r - 4, r - 3, r - 2
+            wants = [(b_dim, dp)] if s[b_dim] % n_dp == 0 and s[b_dim] >= n_dp else []
+            wants += [(h_dim, M), (p_dim, M)]
+            return _assign(mesh, s, wants)
+        if name == "conv":
+            # (..., B, w, Cdim)
+            b_dim, c_dim = r - 3, r - 1
+            wants = [(b_dim, dp)] if s[b_dim] % n_dp == 0 and s[b_dim] >= n_dp else []
+            wants += [(c_dim, M)]
+            return _assign(mesh, s, wants)
+        return P()  # len counters
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

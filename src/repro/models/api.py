@@ -1,0 +1,675 @@
+"""Unified model API: build(config) -> Model with init/forward/serve closures.
+
+One entry point for all 10 assigned architectures:
+
+* ``dense``   minitron-4b, phi3-medium-14b, h2o-danube-1.8b (SWA), qwen3-0.6b
+* ``moe``     mixtral-8x7b (every layer), llama4-maverick (alternating)
+* ``ssm``     mamba2-130m
+* ``hybrid``  zamba2-2.7b (Mamba2 backbone + ONE shared attention block)
+* ``vlm``     llama-3.2-vision-90b (groups of 4 self + 1 gated cross-attn)
+* ``encdec``  whisper-tiny (bidirectional encoder + cross-attending decoder)
+
+Every family exposes the same surface:
+    init_params(key)                        -> params pytree
+    forward(params, batch)                  -> (logits, aux_loss)
+    loss(params, batch)                     -> scalar
+    init_cache(batch_size, max_len)         -> cache pytree
+    prefill(params, batch, cache)           -> (last logits, cache)
+    decode_step(params, token, pos, cache)  -> (logits, cache)
+
+Stacks scan over stacked layer params with per-layer remat; modality
+frontends (vision patches, audio frames) are stubs per the assignment:
+``batch["images"]`` / ``batch["frames"]`` carry precomputed embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import dense, dense_init, embed_init
+from .transformer import (
+    attn_apply, attn_init, block_apply, block_init, mlp_apply, mlp_init,
+    norm_apply, norm_init, stack_init,
+    dense_params_init, dense_forward, dense_init_cache, dense_prefill,
+    dense_decode_step,
+)
+from .moe import moe_apply, moe_init
+from .mamba2 import mamba_apply, mamba_decode_step, mamba_init, mamba_init_state
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init_params: Callable
+    forward: Callable      # (params, batch) -> (logits, aux)
+    init_cache: Callable   # (batch, max_len) -> cache
+    prefill: Callable      # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable  # (params, token, pos, cache) -> (logits, cache)
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        # one-hot contraction instead of take_along_axis: the gather would
+        # force GSPMD to all-gather the vocab-sharded logits (127 GB/device
+        # at qwen3 train_4k); the masked sum keeps the vocab dim sharded.
+        vocab_iota = jnp.arange(logits.shape[-1], dtype=labels.dtype)
+        onehot = (labels[..., None] == vocab_iota)
+        ll = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+        return jnp.mean(lse - ll) + 0.01 * aux
+
+
+def _embed_tokens(p, tokens):
+    from .layers import constrain_acts
+
+    return constrain_acts(p["embed"][tokens].astype(jnp.bfloat16))
+
+
+def _head(p, cfg, x):
+    if cfg.tie_embeddings:
+        return x @ p["embed"].T.astype(x.dtype)
+    return x @ p["head"].astype(x.dtype)
+
+
+def _sinusoid(S: int, D: int, dtype=jnp.bfloat16):
+    pos = jnp.arange(S)[:, None]
+    i = jnp.arange(D // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _sinusoid_at(pos, D: int, dtype=jnp.bfloat16):
+    i = jnp.arange(D // 2)
+    ang = pos / (10000 ** (2 * i / D))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# =============================================================== dense family
+
+def _build_dense(cfg: ArchConfig) -> Model:
+    def forward(p, batch):
+        return dense_forward(p, cfg, batch["tokens"]), 0.0
+
+    def init_cache(batch, max_len):
+        return dense_init_cache(cfg, batch, max_len)
+
+    def prefill(p, batch, cache):
+        return dense_prefill(p, cfg, batch["tokens"], cache)
+
+    def decode_step(p, token, pos, cache):
+        return dense_decode_step(p, cfg, token, pos, cache)
+
+    return Model(cfg, functools.partial(dense_params_init, cfg=cfg),
+                 forward, init_cache, prefill, decode_step)
+
+
+# ================================================================= MoE family
+
+def _moe_super_init(key, cfg: ArchConfig):
+    """One super-block: (moe_every - 1) dense blocks + 1 MoE block."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "moe_ln1": norm_init(cfg),
+        "moe_attn": attn_init(k1, cfg),
+        "moe_ln2": norm_init(cfg),
+        "moe": moe_init(k2, cfg),
+    }
+    if cfg.moe_every > 1:
+        p["dense_blocks"] = stack_init(k3, cfg, cfg.moe_every - 1)
+    return p
+
+
+def _moe_super_apply(p, cfg: ArchConfig, x, positions, caches=None):
+    """caches: dict with 'dense' (stacked) and 'moe' entries or None."""
+    aux = 0.0
+    new_caches = {}
+    if cfg.moe_every > 1:
+        def body(x, inp):
+            bp, bc = inp
+            y, c = block_apply(bp, cfg, x, positions=positions, cache=bc,
+                               window=cfg.sliding_window)
+            return y, c
+
+        dc = caches["dense"] if caches is not None else None
+        if dc is None:
+            x, _ = jax.lax.scan(lambda x, bp: body(x, (bp, None)), x, p["dense_blocks"])
+        else:
+            x, ndc = jax.lax.scan(body, x, (p["dense_blocks"], dc))
+            new_caches["dense"] = ndc
+    h, nc = attn_apply(p["moe_attn"], cfg, norm_apply(cfg, p["moe_ln1"], x),
+                       positions=positions,
+                       cache=None if caches is None else caches["moe"],
+                       window=cfg.sliding_window)
+    x = x + h
+    y, a = moe_apply(p["moe"], cfg, norm_apply(cfg, p["moe_ln2"], x))
+    x = x + y
+    aux = aux + a
+    if caches is not None:
+        new_caches["moe"] = nc
+        return x, aux, new_caches
+    return x, aux, None
+
+
+def _build_moe(cfg: ArchConfig) -> Model:
+    n_super = cfg.n_layers // cfg.moe_every
+
+    def init_params(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "embed": embed_init(k1, cfg.vocab, cfg.d_model),
+            "supers": stack_init(k2, cfg, n_super, init_fn=_moe_super_init),
+            "ln_f": norm_init(cfg),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(k3, cfg.d_model, cfg.vocab, scale=0.02)
+        return p
+
+    def forward(p, batch):
+        tokens = batch["tokens"]
+        x = _embed_tokens(p, tokens)
+        positions = jnp.arange(tokens.shape[1])
+
+        @jax.checkpoint
+        def body(carry, sp):
+            x, aux = carry
+            x, a, _ = _moe_super_apply(sp, cfg, x, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, 0.0), p["supers"])
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), aux
+
+    def init_cache(batch, max_len):
+        L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        kv = lambda n: {
+            "k": jnp.zeros((n, batch, L, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+            "v": jnp.zeros((n, batch, L, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+            "len": jnp.zeros((n,), jnp.int32),
+        }
+        c: Dict[str, Any] = {"moe": kv(n_super)}
+        if cfg.moe_every > 1:
+            c["dense"] = jax.tree.map(
+                lambda a: a.reshape((n_super, cfg.moe_every - 1) + a.shape[1:]),
+                kv(n_super * (cfg.moe_every - 1)),
+            )
+        return c
+
+    def _run_cached(p, x, positions, cache):
+        def body(carry, inp):
+            x, aux = carry
+            sp, sc = inp
+            x, a, nc = _moe_super_apply(sp, cfg, x, positions, caches=sc)
+            return (x, aux + a), nc
+
+        (x, aux), ncache = jax.lax.scan(body, (x, 0.0), (p["supers"], cache))
+        x = norm_apply(cfg, p["ln_f"], x)
+        return x, ncache
+
+    def prefill(p, batch, cache):
+        tokens = batch["tokens"]
+        x = _embed_tokens(p, tokens)
+        positions = jnp.arange(tokens.shape[1])
+        x, ncache = _run_cached(p, x, positions, cache)
+        return _head(p, cfg, x[:, -1:]), ncache
+
+    def decode_step(p, token, pos, cache):
+        x = _embed_tokens(p, token)
+        positions = jnp.asarray([pos])
+        x, ncache = _run_cached(p, x, positions, cache)
+        return _head(p, cfg, x), ncache
+
+    return Model(cfg, init_params, forward, init_cache, prefill, decode_step)
+
+
+# ================================================================= SSM family
+
+def _build_ssm(cfg: ArchConfig) -> Model:
+    def init_params(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": embed_init(k1, cfg.vocab, cfg.d_model),
+            "layers": stack_init(k2, cfg, cfg.n_layers, init_fn=mamba_init),
+            "ln_f": norm_init(cfg),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(k3, cfg.d_model, cfg.vocab, scale=0.02)
+        return p
+
+    def forward(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+
+        @jax.checkpoint
+        def body(x, lp):
+            y, _ = mamba_apply(lp, cfg, x)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, p["layers"])
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), 0.0
+
+    def init_cache(batch, max_len):
+        one = mamba_init_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy(), one
+        )
+
+    def prefill(p, batch, cache):
+        x = _embed_tokens(p, batch["tokens"])
+
+        def body(x, inp):
+            lp, lc = inp
+            return mamba_apply(lp, cfg, x, return_state=True)
+
+        x, ncache = jax.lax.scan(body, x, (p["layers"], cache))
+        x = norm_apply(cfg, p["ln_f"], x[:, -1:])
+        return _head(p, cfg, x), ncache
+
+    def decode_step(p, token, pos, cache):
+        x = _embed_tokens(p, token)
+
+        def body(x, inp):
+            lp, lc = inp
+            return mamba_decode_step(lp, cfg, x, lc)
+
+        x, ncache = jax.lax.scan(body, x, (p["layers"], cache))
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), ncache
+
+    return Model(cfg, init_params, forward, init_cache, prefill, decode_step)
+
+
+# ============================================================== hybrid family
+
+def _build_hybrid(cfg: ArchConfig) -> Model:
+    """zamba2: groups of (attn_every - 1) Mamba2 layers + ONE shared
+    attention block (weights shared across all groups)."""
+    per = cfg.attn_every - 1
+    n_groups = cfg.n_layers // cfg.attn_every
+
+    def init_params(key):
+        ks = jax.random.split(key, 5)
+        p = {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "mamba": jax.vmap(lambda k: stack_init(k, cfg, per, init_fn=mamba_init))(
+                jax.random.split(ks[1], n_groups)
+            ),
+            "shared": block_init(ks[2], cfg),   # the ONE shared attn block
+            "ln_f": norm_init(cfg),
+        }
+        if not cfg.tie_embeddings:
+            p["head"] = dense_init(ks[3], cfg.d_model, cfg.vocab, scale=0.02)
+        return p
+
+    def _group(p_shared, gp, cfg, x, positions, gcache):
+        """one group: per mamba layers + shared attn application."""
+        new_cache = {}
+        if gcache is None:
+            def mbody(x, lp):
+                y, _ = mamba_apply(lp, cfg, x)
+                return y, None
+            x, _ = jax.lax.scan(mbody, x, gp)
+        else:
+            def mbody(x, inp):
+                lp, lc = inp
+                if x.shape[1] == 1:
+                    return mamba_decode_step(lp, cfg, x, lc)
+                return mamba_apply(lp, cfg, x, return_state=True)
+            x, mc = jax.lax.scan(mbody, x, (gp, gcache["mamba"]))
+            new_cache["mamba"] = mc
+        ac = None if gcache is None else gcache["attn"]
+        x, nac = block_apply(p_shared, cfg, x, positions=positions, cache=ac)
+        if gcache is not None:
+            new_cache["attn"] = nac
+            return x, new_cache
+        return x, None
+
+    def forward(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+
+        @jax.checkpoint
+        def body(x, gp):
+            y, _ = _group(p["shared"], gp, cfg, x, positions, None)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, p["mamba"])
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), 0.0
+
+    def init_cache(batch, max_len):
+        one = mamba_init_state(cfg, batch)
+        mamba = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_groups, per) + a.shape).copy(), one
+        )
+        attn = {
+            "k": jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           jnp.bfloat16),
+            "v": jnp.zeros((n_groups, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           jnp.bfloat16),
+            "len": jnp.zeros((n_groups,), jnp.int32),
+        }
+        return {"mamba": mamba, "attn": attn}
+
+    def _run_cached(p, x, positions, cache):
+        def body(x, inp):
+            gp, gc = inp
+            return _group(p["shared"], gp, cfg, x, positions, gc)
+
+        return jax.lax.scan(
+            body, x,
+            (p["mamba"], {"mamba": cache["mamba"], "attn": cache["attn"]}),
+        )
+
+    def prefill(p, batch, cache):
+        x = _embed_tokens(p, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        x, nc = _run_cached(p, x, positions, cache)
+        x = norm_apply(cfg, p["ln_f"], x[:, -1:])
+        return _head(p, cfg, x), nc
+
+    def decode_step(p, token, pos, cache):
+        x = _embed_tokens(p, token)
+        positions = jnp.asarray([pos])
+        x, nc = _run_cached(p, x, positions, cache)
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), nc
+
+    return Model(cfg, init_params, forward, init_cache, prefill, decode_step)
+
+
+# ================================================================= VLM family
+
+def _cross_block_init(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": norm_init(cfg),
+        "attn": attn_init(k1, cfg),
+        "ln2": norm_init(cfg),
+        "mlp": mlp_init(k2, cfg),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def _cross_block_apply(p, cfg, x, kv_x=None, kv_cache=None):
+    """Gated cross-attention block (llama-3.2-vision style).
+
+    kv_x: image embeddings (prefill/train); kv_cache: precomputed (k, v).
+    """
+    h = norm_apply(cfg, p["ln1"], x)
+    B, S, D = x.shape
+    hd = cfg.d_head
+    q = dense(p["attn"]["wq"], h).reshape(B, S, cfg.n_heads, hd)
+    if kv_cache is None:
+        k = dense(p["attn"]["wk"], kv_x).reshape(B, -1, cfg.n_kv_heads, hd)
+        v = dense(p["attn"]["wv"], kv_x).reshape(B, -1, cfg.n_kv_heads, hd)
+    else:
+        k, v = kv_cache["k"], kv_cache["v"]
+    from .layers import chunked_attention
+    o = chunked_attention(q, k, v, causal=False)
+    y = dense(p["attn"]["wo"], o.reshape(B, S, cfg.n_heads * hd))
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * y
+    y = mlp_apply(cfg, p["mlp"], norm_apply(cfg, p["ln2"], x))
+    x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * y
+    return x, {"k": k, "v": v}
+
+
+def _build_vlm(cfg: ArchConfig) -> Model:
+    per = cfg.cross_attn_every - 1   # self layers per group
+    n_groups = cfg.n_layers // cfg.cross_attn_every
+
+    def init_params(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "self": jax.vmap(lambda k: stack_init(k, cfg, per))(
+                jax.random.split(ks[1], n_groups)
+            ),
+            "cross": stack_init(ks[2], cfg, n_groups, init_fn=_cross_block_init),
+            "ln_f": norm_init(cfg),
+            "head": dense_init(ks[3], cfg.d_model, cfg.vocab, scale=0.02),
+        }
+
+    def _group(gp_self, gp_cross, x, positions, images, gcache):
+        ncache = {}
+        if gcache is None:
+            def body(x, bp):
+                y, _ = block_apply(bp, cfg, x, positions=positions)
+                return y, None
+            x, _ = jax.lax.scan(body, x, gp_self)
+            x, _ = _cross_block_apply(gp_cross, cfg, x, kv_x=images)
+            return x, None
+        def body(x, inp):
+            bp, bc = inp
+            return block_apply(bp, cfg, x, positions=positions, cache=bc)
+        x, sc = jax.lax.scan(body, x, (gp_self, gcache["self"]))
+        ncache["self"] = sc
+        kvc = gcache["cross"] if gcache["cross"] is not None else None
+        x, kv = _cross_block_apply(gp_cross, cfg, x, kv_x=images, kv_cache=kvc)
+        ncache["cross"] = kv
+        return x, ncache
+
+    def forward(p, batch):
+        x = _embed_tokens(p, batch["tokens"])
+        images = batch["images"].astype(jnp.bfloat16)  # (B, n_img, D) stub
+        positions = jnp.arange(x.shape[1])
+
+        @jax.checkpoint
+        def body(x, inp):
+            gs, gc = inp
+            y, _ = _group(gs, gc, x, positions, images, None)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, (p["self"], p["cross"]))
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), 0.0
+
+    def init_cache(batch, max_len):
+        kv = {
+            "k": jnp.zeros((n_groups, per, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           jnp.bfloat16),
+            "v": jnp.zeros((n_groups, per, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                           jnp.bfloat16),
+            "len": jnp.zeros((n_groups, per), jnp.int32),
+        }
+        cross = {
+            "k": jnp.zeros((n_groups, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.d_head),
+                           jnp.bfloat16),
+            "v": jnp.zeros((n_groups, batch, cfg.n_image_tokens, cfg.n_kv_heads, cfg.d_head),
+                           jnp.bfloat16),
+        }
+        return {"self": kv, "cross": cross}
+
+    def _run_cached(p, x, positions, images, cache):
+        def body(x, inp):
+            gs, gc, sc = inp
+            return _group(gs, gc, x, positions, images, sc)
+
+        return jax.lax.scan(
+            body, x,
+            (p["self"], p["cross"],
+             {"self": cache["self"], "cross": cache["cross"]}),
+        )
+
+    def prefill(p, batch, cache):
+        x = _embed_tokens(p, batch["tokens"])
+        images = batch["images"].astype(jnp.bfloat16)
+        positions = jnp.arange(x.shape[1])
+        x, nc = _run_cached(p, x, positions, images, cache)
+        x = norm_apply(cfg, p["ln_f"], x[:, -1:])
+        return _head(p, cfg, x), nc
+
+    def decode_step(p, token, pos, cache):
+        x = _embed_tokens(p, token)
+        positions = jnp.asarray([pos])
+        B = token.shape[0]
+        images = jnp.zeros((B, 0, cfg.d_model), jnp.bfloat16)  # unused: kv cached
+        x, nc = _run_cached(p, x, positions, images, cache)
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), nc
+
+    return Model(cfg, init_params, forward, init_cache, prefill, decode_step)
+
+
+# ============================================================== encdec family
+
+def _build_encdec(cfg: ArchConfig) -> Model:
+    """whisper-style: bidirectional encoder over stub frame embeddings,
+    causal decoder with per-layer cross attention."""
+
+    def _dec_block_init(key, cfg):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": norm_init(cfg),
+            "self": attn_init(k1, cfg),
+            "ln_x": norm_init(cfg),
+            "cross": attn_init(k2, cfg),
+            "ln2": norm_init(cfg),
+            "mlp": mlp_init(k3, cfg),
+        }
+
+    def init_params(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "enc": stack_init(ks[1], cfg, cfg.n_enc_layers),
+            "ln_enc": norm_init(cfg),
+            "dec": stack_init(ks[2], cfg, cfg.n_layers, init_fn=_dec_block_init),
+            "ln_f": norm_init(cfg),
+            "head": dense_init(ks[3], cfg.d_model, cfg.vocab, scale=0.02),
+        }
+
+    def encode(p, frames):
+        x = frames.astype(jnp.bfloat16) + _sinusoid(frames.shape[1], cfg.d_model)
+
+        @jax.checkpoint
+        def body(x, bp):
+            y, _ = block_apply(bp, cfg, x, causal=False, use_rope=False)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, p["enc"])
+        return norm_apply(cfg, p["ln_enc"], x)
+
+    def _dec_block(bp, cfg, x, mem, positions, cache=None, cross_kv=None):
+        nc = {}
+        h, sc = attn_apply(bp["self"], cfg, norm_apply(cfg, bp["ln1"], x),
+                           positions=positions, use_rope=False,
+                           cache=None if cache is None else cache["self"])
+        x = x + h
+        if cross_kv is not None:
+            x2, _ = _cross_from_kv(bp["cross"], cfg, norm_apply(cfg, bp["ln_x"], x), cross_kv)
+        else:
+            x2, _ = attn_apply(bp["cross"], cfg, norm_apply(cfg, bp["ln_x"], x),
+                               kv_x=mem, causal=False, use_rope=False)
+        x = x + x2
+        x = x + mlp_apply(cfg, bp["mlp"], norm_apply(cfg, bp["ln2"], x))
+        if cache is not None:
+            nc["self"] = sc
+            return x, nc
+        return x, None
+
+    def _cross_from_kv(ap, cfg, x, kv):
+        B, S, D = x.shape
+        hd = cfg.d_head
+        q = dense(ap["wq"], x).reshape(B, S, cfg.n_heads, hd)
+        from .layers import chunked_attention
+        o = chunked_attention(q, kv["k"], kv["v"], causal=False)
+        return dense(ap["wo"], o.reshape(B, S, cfg.n_heads * hd)), None
+
+    def forward(p, batch):
+        mem = encode(p, batch["frames"])
+        tokens = batch["tokens"]
+        x = _embed_tokens(p, tokens) + _sinusoid(tokens.shape[1], cfg.d_model)
+        positions = jnp.arange(tokens.shape[1])
+
+        @jax.checkpoint
+        def body(x, bp):
+            return _dec_block(bp, cfg, x, mem, positions)
+
+        x, _ = jax.lax.scan(body, x, p["dec"])
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), 0.0
+
+    def init_cache(batch, max_len):
+        return {
+            "self": {
+                "k": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                               jnp.bfloat16),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                               jnp.bfloat16),
+                "len": jnp.zeros((cfg.n_layers,), jnp.int32),
+            },
+            "cross": {
+                "k": jnp.zeros((cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads, cfg.d_head),
+                               jnp.bfloat16),
+                "v": jnp.zeros((cfg.n_layers, batch, cfg.n_frames, cfg.n_kv_heads, cfg.d_head),
+                               jnp.bfloat16),
+            },
+        }
+
+    def prefill(p, batch, cache):
+        mem = encode(p, batch["frames"])
+        # precompute per-layer cross KV once (decode reuses it)
+        def xkv(bp):
+            B, Sk, D = mem.shape
+            k = dense(bp["cross"]["wk"], mem).reshape(B, Sk, cfg.n_kv_heads, cfg.d_head)
+            v = dense(bp["cross"]["wv"], mem).reshape(B, Sk, cfg.n_kv_heads, cfg.d_head)
+            return {"k": k, "v": v}
+
+        cross = jax.vmap(xkv)(p["dec"])
+        tokens = batch["tokens"]
+        x = _embed_tokens(p, tokens) + _sinusoid(tokens.shape[1], cfg.d_model)
+        positions = jnp.arange(tokens.shape[1])
+
+        def body(x, inp):
+            bp, sc, ckv = inp
+            y, nc = _dec_block(bp, cfg, x, None, positions,
+                               cache={"self": sc}, cross_kv=ckv)
+            return y, nc["self"]
+
+        x, sc = jax.lax.scan(body, x, (p["dec"], cache["self"], cross))
+        x = norm_apply(cfg, p["ln_f"], x[:, -1:])
+        return _head(p, cfg, x), {"self": sc, "cross": cross}
+
+    def decode_step(p, token, pos, cache):
+        x = _embed_tokens(p, token) + _sinusoid_at(pos, cfg.d_model)
+        positions = jnp.asarray([pos])
+
+        def body(x, inp):
+            bp, sc, ckv = inp
+            y, nc = _dec_block(bp, cfg, x, None, positions,
+                               cache={"self": sc}, cross_kv=ckv)
+            return y, nc["self"]
+
+        x, sc = jax.lax.scan(body, x, (p["dec"], cache["self"], cache["cross"]))
+        x = norm_apply(cfg, p["ln_f"], x)
+        return _head(p, cfg, x), {"self": sc, "cross": cache["cross"]}
+
+    return Model(cfg, init_params, forward, init_cache, prefill, decode_step)
+
+
+# ==================================================================== builder
+
+_BUILDERS = {
+    "dense": _build_dense,
+    "moe": _build_moe,
+    "ssm": _build_ssm,
+    "hybrid": _build_hybrid,
+    "vlm": _build_vlm,
+    "encdec": _build_encdec,
+}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    try:
+        return _BUILDERS[cfg.family](cfg)
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r}")

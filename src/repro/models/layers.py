@@ -1,0 +1,272 @@
+"""Shared neural-net layers (pure JAX, functional params-as-pytrees).
+
+Conventions:
+* params are nested dicts of jnp arrays; init fns take an rng + config and
+  return the dict; apply fns take (params, inputs).
+* compute dtype is bf16 (cast at entry), params are stored fp32
+  ("master") — the optimizer keeps moments in a configurable dtype.
+* attention is *chunked* (online-softmax / FlashAttention-style lax.scan)
+  so 32k-token prefill never materializes an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "dense",
+    "rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm",
+    "rope", "chunked_attention", "decode_attention",
+    "swiglu_init", "swiglu", "gelu_mlp_init", "gelu_mlp",
+    "embed_init",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale)
+
+
+def dense(w, x):
+    return x @ w.astype(x.dtype)
+
+
+def rmsnorm_init(d: int):
+    return jnp.ones((d,), dtype=jnp.float32)
+
+
+def rmsnorm(g, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * g.astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["g"] + p["b"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Activation-sharding hook: the launch layer can register a constraint that
+# model code applies at layer boundaries (keeps models mesh-agnostic while
+# letting pjit anchor activation shardings instead of relying on pure
+# propagation, which replicates batch in practice — see EXPERIMENTS.md §Perf).
+_ACT_SHARDING = {"val": None}
+
+# Attention q-chunk sharding (§Perf "sequence-sharded attention"): when kv
+# heads don't divide the model axis, head-parallel attention replicates
+# compute; sharding the *q-chunk* axis of the chunked-attention map over
+# "model" restores full parallelism (kv is small and gets all-gathered).
+# Registered as (sharding for the (nq, B, G, R, qc, Dh) stack, target nq).
+_ATTN_SHARDING = {"val": None, "nq": None}
+
+
+def set_activation_sharding(sharding) -> None:
+    """Register a NamedSharding for (B, S, D) activations (None to clear)."""
+    _ACT_SHARDING["val"] = sharding
+
+
+def set_attention_sharding(sharding, nq: Optional[int]) -> None:
+    """Register q-chunk-axis sharding for chunked attention (None to clear)."""
+    _ATTN_SHARDING["val"] = sharding
+    _ATTN_SHARDING["nq"] = nq
+
+
+def constrain_acts(x: jnp.ndarray) -> jnp.ndarray:
+    s = _ACT_SHARDING["val"]
+    if s is not None and x.ndim == 3:
+        return jax.lax.with_sharding_constraint(x, s)
+    return x
+
+
+def _constrain_qchunks(x: jnp.ndarray) -> jnp.ndarray:
+    s = _ATTN_SHARDING["val"]
+    if s is not None and x.ndim == 6:
+        return jax.lax.with_sharding_constraint(x, s)
+    return x
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, S, H, Dh), positions: (S,).
+
+    cos/sin are computed at (S, half) — never broadcast over batch/heads —
+    so the saved-for-backward footprint stays negligible.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None].astype(jnp.float32) * freq        # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :].astype(x.dtype)       # (1, S, 1, half)
+    sin = jnp.sin(ang)[None, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _attend_block(q, k, v, bias):
+    """Grouped attention block.
+
+    q: (B,G,R,Tq,Dh), k/v: (B,G,Tk,Dh), bias: (Tq,Tk) additive (fp32).
+    R = query heads per kv head (GQA) — kv is never materialized per-head.
+    """
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q, k).astype(jnp.float32)
+    s = s * (1.0 / math.sqrt(q.shape[-1])) + bias
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)  # rows that are fully masked
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v)
+    return o, m[..., 0], l[..., 0]
+
+
+def chunked_attention(
+    q: jnp.ndarray,          # (B, Sq, H, Dh)
+    k: jnp.ndarray,          # (B, Sk, G, Dh)   G = kv heads
+    v: jnp.ndarray,          # (B, Sk, G, Dh)
+    causal: bool = True,
+    window: Optional[int] = None,   # sliding-window width (tokens), None = full
+    q_offset: int = 0,       # absolute position of q[0] (chunked prefill)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax (FlashAttention-style) GQA attention, O(S·chunk) memory.
+
+    The kv scan is wrapped in jax.checkpoint so the backward pass recomputes
+    blocks instead of saving every (q_chunk, kv_chunk) score tile.
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, G, _ = k.shape
+    assert H % G == 0
+    rep = H // G
+
+    nq_target = _ATTN_SHARDING["nq"]
+    if nq_target and Sq % nq_target == 0 and Sq // nq_target >= 16:
+        q_chunk = Sq // nq_target  # align the q-chunk axis with "model"
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    # pad to chunk multiples (mask handles the tail)
+    qp = jnp.pad(q, ((0, 0), (0, nq * q_chunk - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kv_chunk - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kv_chunk - Sk), (0, 0), (0, 0)))
+
+    # grouped layout: (B, G, R, S, Dh) for q, (B, G, S, Dh) for kv
+    qp = jnp.moveaxis(qp, 2, 1).reshape(B, G, rep, nq * q_chunk, Dh)
+    kp = jnp.moveaxis(kp, 2, 1)  # (B, G, Sk, Dh)
+    vp = jnp.moveaxis(vp, 2, 1)
+    kb = kp.reshape(B, G, nk, kv_chunk, Dh)
+    vb = vp.reshape(B, G, nk, kv_chunk, Dh)
+
+    qpos_base = jnp.arange(q_chunk) + q_offset
+    kpos_all = jnp.arange(nk * kv_chunk)
+
+    @jax.checkpoint
+    def one_q_chunk(qc, qi):
+        qpos = qpos_base + qi * q_chunk
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            kc, vc, ki = inputs
+            kpos = jax.lax.dynamic_slice_in_dim(kpos_all, ki * kv_chunk, kv_chunk)
+            valid = (kpos < Sk)[None, :] & (qpos < Sq + q_offset)[:, None]
+            if causal:
+                valid &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                valid &= kpos[None, :] > (qpos[:, None] - window)
+            bias = jnp.where(valid, 0.0, -1e30)
+            o, mb, lb = _attend_block(qc, kc, vc, bias)
+            m_new = jnp.maximum(m, mb)
+            alpha = jnp.exp(m - m_new)
+            beta = jnp.exp(mb - m_new)
+            acc = acc * alpha[..., None].astype(acc.dtype) + o * beta[..., None].astype(o.dtype)
+            l = l * alpha + lb * beta
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, G, rep, q_chunk, Dh), qc.dtype)
+        m0 = jnp.full((B, G, rep, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, G, rep, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), jnp.arange(nk)),
+        )
+        return acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+
+    qcs = qp.reshape(B, G, rep, nq, q_chunk, Dh)
+    stacked = jnp.moveaxis(qcs, 3, 0)
+    if _ATTN_SHARDING["val"] is not None:
+        # sequence-sharded attention (§Perf): q-chunks computed as a
+        # *batched* (vmapped) axis so GSPMD can shard it over "model";
+        # lax.map would serialize chunks in a while loop instead.
+        stacked = _constrain_qchunks(stacked)
+        out = jax.vmap(one_q_chunk)(stacked, jnp.arange(nq))
+        out = _constrain_qchunks(out)
+    else:
+        out = jax.lax.map(lambda args: one_q_chunk(*args),
+                          (stacked, jnp.arange(nq)))
+    # (nq, B, G, rep, q_chunk, Dh) -> (B, Sq, H, Dh)
+    out = jnp.moveaxis(out, 0, 3).reshape(B, G, rep, nq * q_chunk, Dh)
+    out = out.reshape(B, H, nq * q_chunk, Dh)
+    out = jnp.moveaxis(out, 1, 2)[:, :Sq]
+    return out
+
+
+def decode_attention(
+    q: jnp.ndarray,       # (B, 1, H, Dh)
+    k_cache: jnp.ndarray,  # (B, L, G, Dh)  L = cache length
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray | int,  # number of valid entries
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache (full or ring)."""
+    B, L, G, Dh = k_cache.shape
+    H = q.shape[2]
+    rep = H // G
+    kq = jnp.moveaxis(k_cache, 2, 1)  # (B,G,L,Dh)
+    vq = jnp.moveaxis(v_cache, 2, 1)
+    qh = jnp.moveaxis(q, 2, 1).reshape(B, G, rep, 1, Dh)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qh, kq).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    pos = jnp.arange(L)
+    mask = pos[None, None, None, None, :] < cache_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(vq.dtype)
+    o = jnp.einsum("bgrqk,bgkd->bgrqd", p, vq)
+    return jnp.moveaxis(o.reshape(B, H, 1, Dh), 1, 2)  # (B, 1, H, Dh)
+
+
+def swiglu_init(key, d: int, f: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f),
+        "w_up": dense_init(k2, d, f),
+        "w_down": dense_init(k3, f, d),
+    }
+
+
+def swiglu(p, x):
+    g = dense(p["w_gate"], x)
+    u = dense(p["w_up"], x)
+    return dense(p["w_down"], jax.nn.silu(g) * u)
+
+
+def gelu_mlp_init(key, d: int, f: int):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, f), "w_out": dense_init(k2, f, d)}
+
+
+def gelu_mlp(p, x):
+    return dense(p["w_out"], jax.nn.gelu(dense(p["w_in"], x)))
+
+
+def embed_init(key, vocab: int, d: int):
+    return jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02

@@ -1,0 +1,200 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+The SSD chunked scan is the direct structural analogue of the paper's
+SO2DR (DESIGN.md §Arch-applicability): the sequence is split into chunks,
+an O(N·P) carried state plays the role of the region-sharing buffer at
+chunk boundaries, and the intra-chunk quadratic part is uninterrupted
+on-chip work — temporal blocking along the sequence axis.
+
+Shapes: x (B, S, H, P) heads×head_dim, B/C (B, S, N) state projections
+(single group), dt (B, S, H), A (H,) negative decay.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_init_state", "mamba_decode_step"]
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{k=j+1..i} a_k
+    for i >= j, -inf otherwise (log-space decay matrix)."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba_init(key, cfg: ArchConfig):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.conv_width
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": rmsnorm_init(cfg.d_model),
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * di + 2 * N + H),
+        "conv_w": jax.random.normal(ks[1], (w, conv_dim), jnp.float32) * (w ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "gn": rmsnorm_init(di),
+        "out_proj": dense_init(ks[2], di, cfg.d_model),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Depthwise causal conv1d along S.  xBC: (B, S, C)."""
+    pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1]] * p["conv_w"][i].astype(xBC.dtype)
+        for i in range(w)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """SSD chunked scan.
+
+    x: (B,S,H,P) *already* dt-scaled inputs? No — raw; dt applied here.
+    dt: (B,S,H) softplus'd;  A: (H,) negative;  Bm/Cm: (B,S,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    f32 = jnp.float32
+    xdt = (x * dt[..., None]).astype(f32).reshape(Bsz, nc, Q, H, P)
+    dA = (dt * A).astype(f32).reshape(Bsz, nc, Q, H)        # (B,nc,Q,H)
+    dA = jnp.moveaxis(dA, 3, 2)                              # (B,nc,H,Q)
+    Bc = Bm.astype(f32).reshape(Bsz, nc, Q, N)
+    Cc = Cm.astype(f32).reshape(Bsz, nc, Q, N)
+
+    L = jnp.exp(_segsum(dA))                                 # (B,nc,H,Q,Q)
+    # intra-chunk (the "on-chip" quadratic part)
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", Cc, Bc, L, xdt)
+
+    dA_cum = jnp.cumsum(dA, axis=-1)                         # (B,nc,H,Q)
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)        # (B,nc,H,Q)
+    chunk_states = jnp.einsum("bckn,bchk,bckhp->bchpn", Bc, decay_states, xdt)
+
+    # inter-chunk recurrence (the "region-sharing" state hand-off)
+    chunk_decay = jnp.exp(dA_cum[..., -1])                   # (B,nc,H)
+
+    def step(h, inp):
+        s_c, g_c = inp
+        h_new = h * g_c[..., None, None] + s_c
+        return h_new, h  # emit state *entering* this chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), f32) if init_state is None else init_state.astype(f32)
+    hT, prev = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev = jnp.moveaxis(prev, 0, 1)                          # (B,nc,H,P,N)
+
+    out_decay = jnp.exp(dA_cum)                              # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, prev, out_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, H, P)[:, :S]
+    return y.astype(x.dtype), hT
+
+
+def mamba_apply(
+    p,
+    cfg: ArchConfig,
+    u: jnp.ndarray,                       # (B, S, D)
+    init_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Full-sequence Mamba-2 block (training / prefill)."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B, S, D = u.shape
+    res = u
+    x = rmsnorm(p["ln"], u)
+    z, xBC_raw, dt = _split_proj(cfg, dense(p["in_proj"], x))
+    xBC = _causal_conv(p, xBC_raw, cfg.conv_width)
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di : di + N]
+    Cm = xBC[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, hT = _ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rmsnorm(p["gn"], y * jax.nn.silu(z))
+    from .layers import constrain_acts
+
+    out = constrain_acts(res + dense(p["out_proj"], y))
+    if return_state:
+        # conv history for decode continuity: last (w-1) raw conv inputs
+        w = cfg.conv_width
+        tail = xBC_raw[:, -(w - 1):].astype(jnp.bfloat16)
+        pad = (w - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"ssm": hT, "conv": tail}
+    return out, None
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.bfloat16),
+    }
+
+
+def mamba_decode_step(p, cfg: ArchConfig, u: jnp.ndarray, state):
+    """One-token recurrent step.  u: (B, 1, D) -> (B, 1, D), new state."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    B = u.shape[0]
+    res = u
+    x = rmsnorm(p["ln"], u)
+    z, xBC, dt = _split_proj(cfg, dense(p["in_proj"], x))  # (B,1,*)
+    # conv cache: last (w-1) inputs
+    w = cfg.conv_width
+    hist = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)], axis=1)  # (B,w,Cdim)
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), p["conv_w"])
+    xBC1 = jax.nn.silu(conv_out + p["conv_b"]).astype(u.dtype)[:, None]  # (B,1,C)
+    new_conv = hist[:, 1:]
+
+    xs = xBC1[..., :di].reshape(B, H, P)
+    Bm = xBC1[..., di : di + N].reshape(B, N).astype(jnp.float32)
+    Cm = xBC1[..., di + N :].reshape(B, N).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32).reshape(B, H) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dtv * A)                                     # (B,H)
+    xdt = (xs.astype(jnp.float32) * dtv[..., None])           # (B,H,P)
+    h = state["ssm"] * dA[..., None, None] + xdt[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm).astype(u.dtype)
+    y = y + xs * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rmsnorm(p["gn"], y * jax.nn.silu(z))
+    out = res + dense(p["out_proj"], y)
+    return out, {"ssm": h, "conv": new_conv}

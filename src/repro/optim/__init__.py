@@ -1,0 +1,1 @@
+from .adamw import AdamW, OptState  # noqa: F401

@@ -1,0 +1,1 @@
+from .decode import make_prefill, make_decode_step  # noqa: F401

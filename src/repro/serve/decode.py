@@ -1,0 +1,40 @@
+"""Serving steps: batched prefill + single-token decode.
+
+``serve_step`` for the dry-run decode shapes is ``make_decode_step`` —
+one new token against a ``seq_len``-deep KV cache (ring-buffer for SWA
+archs, O(1) recurrent state for SSM/hybrid).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill", "make_decode_step", "greedy_generate"]
+
+
+def make_prefill(model):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill
+
+
+def make_decode_step(model):
+    def step(params, token, pos, cache):
+        return model.decode_step(params, token, pos, cache)
+    return step
+
+
+def greedy_generate(model, params, batch, max_new: int, max_len: int):
+    """Batched greedy decoding driver (examples/serve_lm.py)."""
+    B = batch["tokens"].shape[0]
+    S = batch["tokens"].shape[1]
+    cache = model.init_cache(B, max_len)
+    logits, cache = model.prefill(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    step = jax.jit(model.decode_step)
+    for i in range(max_new - 1):
+        logits, cache = step(params, tok, jnp.int32(S + i), cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+from .loop import TrainConfig, Trainer, compress_grads  # noqa: F401

@@ -1,0 +1,28 @@
+"""predict_stats must equal the real engines' accounting bit-for-bit."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.accounting import predict_stats
+from repro.core.oocore import get_engine
+from repro.core.stencil import get_stencil
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("engine", ["incore", "naive_tb", "resreu", "so2dr"])
+@pytest.mark.parametrize("name,n,d,k_off,k_on", [
+    ("box2d1r", 10, 4, 4, 3),
+    ("box2d2r", 7, 3, 3, 2),
+    ("gradient2d", 5, 2, 5, 5),
+])
+def test_predicted_equals_measured(engine, name, n, d, k_off, k_on):
+    st = get_stencil(name)
+    Y, X = 72 + 2 * st.radius, 40 + 2 * st.radius
+    x = RNG.standard_normal((Y, X)).astype(np.float32)
+    de = 1 if engine == "incore" else d
+    _, real = get_engine(engine, d=de, k_off=k_off, k_on=k_on).run(x, st, n)
+    pred = predict_stats(engine, st, Y, X, n, de, k_off, k_on, itemsize=4)
+    for f in dataclasses.fields(real):
+        assert getattr(real, f.name) == getattr(pred, f.name), (engine, f.name)

@@ -1,0 +1,48 @@
+"""Autotuner (paper Sec. VII future work): selection sanity + optimality."""
+import numpy as np
+
+from repro.core.analytic import RTX3080_PAPER, TPU_V5E
+from repro.core.autotune import autotune, optimization_target
+from repro.core.stencil import get_stencil
+
+
+def test_best_choice_is_so2dr_when_kernel_bound():
+    """On the paper's machine at r=1, kernels dominate -> SO2DR with
+    multi-step kernels must beat every ResReu config."""
+    st = get_stencil("box2d1r")
+    ranked = autotune(st, 38400, 640, RTX3080_PAPER)
+    assert ranked, "feasible set empty"
+    best = ranked[0]
+    assert best.engine == "so2dr" and best.k_on > 1
+    best_resreu = min(c.time_s for c in ranked if c.engine == "resreu")
+    assert best.time_s < best_resreu
+
+
+def test_selector_prefers_fused_kernels_only_when_they_help():
+    """On TPU v5e, box2d4r single-step kernels are already compute-bound
+    (DESIGN.md §2): fusing steps cannot beat the compute roofline, so the
+    best SO2DR config must not be materially faster than k_on=1."""
+    st = get_stencil("box2d4r")
+    ranked = autotune(st, 38400, 640, TPU_V5E, engines=("so2dr",))
+    best = ranked[0]
+    k1 = min(c.time_s for c in ranked if c.k_on == 1)
+    assert best.time_s >= 0.95 * k1
+
+
+def test_optimization_target_matches_paper_fig3():
+    """The paper's preliminary experiment (Fig. 3b): large TB-step counts
+    turn the workload kernel-bound."""
+    st = get_stencil("box2d1r")
+    tgt = optimization_target(st, 38400, 640, RTX3080_PAPER)
+    assert tgt == "kernel"
+
+
+def test_ranked_times_are_sorted_and_positive():
+    st = get_stencil("gradient2d")
+    ranked = autotune(st, 12800, 320, TPU_V5E)
+    times = [c.time_s for c in ranked]
+    assert times == sorted(times)
+    assert all(t > 0 for t in times)
+    # every candidate satisfies the feasibility constraint k*r <= chunk
+    for c in ranked:
+        assert c.s_tb * st.radius <= (12800 // c.d)

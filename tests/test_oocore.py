@@ -1,0 +1,122 @@
+"""Out-of-core engines vs the oracle + TransferStats invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st_h
+
+from repro.core.oocore import InCore, NaiveTB, ResReu, SO2DR, get_engine
+from repro.core.reference import run_reference
+from repro.core.stencil import get_stencil
+
+RNG = np.random.default_rng(3)
+
+
+def _domain(st, rows=60, cols=44):
+    Y, X = rows + 2 * st.radius, cols + 2 * st.radius
+    return RNG.standard_normal((Y, X)).astype(np.float32)
+
+
+@pytest.mark.parametrize("name", ["box2d1r", "box2d2r", "gradient2d"])
+@pytest.mark.parametrize("engine", ["incore", "naive_tb", "resreu", "so2dr"])
+def test_engine_matches_oracle(name, engine):
+    st = get_stencil(name)
+    x = _domain(st)
+    n = 10
+    ref = np.asarray(run_reference(jnp.asarray(x), st, n))
+    eng = get_engine(engine, d=4, k_off=4, k_on=3)
+    out, _ = eng.run(x, st, n)
+    scale = np.abs(ref).max() + 1e-6
+    assert np.abs(out - ref).max() / scale < 1e-5
+
+
+def test_transfer_stats_invariants():
+    st = get_stencil("box2d2r")
+    x = _domain(st)
+    n, d, k = 8, 4, 4
+    _, s_naive = NaiveTB(d=d, k_off=k, k_on=2).run(x, st, n)
+    _, s_res = ResReu(d=d, k_off=k, k_on=2).run(x, st, n)
+    _, s_so = SO2DR(d=d, k_off=k, k_on=2).run(x, st, n)
+    _, s_inc = InCore(d=1, k_off=k, k_on=2).run(x, st, n)
+
+    # region sharing eliminates redundant transfer
+    assert s_so.h2d_bytes == s_res.h2d_bytes
+    assert s_naive.h2d_bytes > s_so.h2d_bytes
+    # ResReu: zero redundant compute; SO2DR: deliberate redundancy
+    assert s_res.redundant_elements == 0
+    assert s_so.redundant_elements > 0
+    assert s_naive.redundant_elements == s_so.redundant_elements
+    # SO2DR needs far fewer kernel launches (k_on-fused, uninterrupted)
+    assert s_so.kernel_calls < s_res.kernel_calls
+    # in-core: one transfer each way
+    assert s_inc.h2d_bytes == x.nbytes and s_inc.d2h_bytes == x.nbytes
+    # everyone does the same useful work
+    assert s_res.exact_elements == s_so.exact_elements == s_naive.exact_elements
+
+
+def test_resreu_paper_shares_two_regions_per_step():
+    """The paper (Fig. 2b): two r-row regions read + two written per step."""
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    n, d, k = 4, 4, 4
+    _, s = ResReu(d=d, k_off=k, k_on=1).run(x, st, n)
+    X = x.shape[1]
+    r = st.radius
+    per_step = 2 * r * X * 4  # bytes of one shared-region pair
+    # chunks 0..d-2 write, chunks 1..d-1 read, k steps per round, 1 round
+    expect = per_step * k * (d - 1) * 2
+    assert s.buffer_bytes == expect
+
+
+def test_so2dr_redundancy_is_k_squared():
+    """Redundant rows per interior boundary per round = r*k(k-1)."""
+    st = get_stencil("box2d1r")
+    x = _domain(st, rows=64)
+    d = 2
+    for k in (2, 4):
+        _, s = SO2DR(d=d, k_off=k, k_on=1).run(x, st, k)  # one round
+        X_int = x.shape[1] - 2 * st.radius
+        expect = st.radius * k * (k - 1) * X_int * (d - 1)
+        assert s.redundant_elements == expect, (k, s.redundant_elements, expect)
+
+
+def test_k_off_feasibility_validated():
+    st = get_stencil("box2d4r")
+    x = _domain(st, rows=32)  # chunks of 8 rows, r=4 -> max k_off = 2
+    with pytest.raises(ValueError):
+        SO2DR(d=4, k_off=3, k_on=1).run(x, st, 3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    name=st_h.sampled_from(["box2d1r", "box2d2r", "gradient2d"]),
+    n=st_h.integers(1, 9),
+    d=st_h.integers(1, 5),
+    k_off=st_h.integers(1, 5),
+    k_on=st_h.integers(1, 5),
+    rows=st_h.integers(40, 80),
+)
+def test_engines_property(name, n, d, k_off, k_on, rows):
+    st = get_stencil(name)
+    x = _domain(st, rows=rows)
+    min_chunk = (rows // d) if d else rows
+    if k_off * st.radius > min_chunk or min_chunk < 2 * st.radius:
+        return
+    ref = np.asarray(run_reference(jnp.asarray(x), st, n))
+    scale = np.abs(ref).max() + 1e-6
+    for engine in ("so2dr", "resreu"):
+        out, _ = get_engine(engine, d=d, k_off=k_off, k_on=k_on).run(x, st, n)
+        assert np.abs(out - ref).max() / scale < 1e-5, engine
+
+
+def test_so2dr_with_pallas_kernel():
+    """Alg. 1 driven by the actual Pallas fused kernel (interpret mode)."""
+    from repro.kernels.ops import kernel_fused_step
+
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    n = 6
+    ref = np.asarray(run_reference(jnp.asarray(x), st, n))
+    eng = SO2DR(d=2, k_off=3, k_on=3, fused_step=kernel_fused_step)
+    out, _ = eng.run(x, st, n)
+    scale = np.abs(ref).max() + 1e-6
+    assert np.abs(out - ref).max() / scale < 1e-5

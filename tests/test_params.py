@@ -1,0 +1,38 @@
+"""Sec. IV-C run-time parameter heuristic: every candidate satisfies every
+constraint (hypothesis over hardware/software configs)."""
+from hypothesis import given, settings, strategies as st_h
+
+from repro.core.analytic import Hardware, RTX3080_PAPER, TPU_V5E
+from repro.core.params import CodeSpec, enumerate_candidates, feasible
+
+
+def test_paper_configs_are_feasible_on_paper_machine():
+    """The paper uses d in {4,8} and S_TB in {40..640} for 38400^2 fp32."""
+    code = CodeSpec(sz=38400, radius=1, b_elem=4, total_steps=640)
+    cands = enumerate_candidates(code, RTX3080_PAPER)
+    pairs = {(c.d, c.s_tb) for c in cands}
+    assert (4, 160) in pairs  # the config the paper selects for box2d1r
+    assert all(c.halo_fraction <= 1.0 for c in cands)
+
+
+def test_feasible_set_nonempty_on_tpu():
+    code = CodeSpec(sz=38400, radius=1, b_elem=4, total_steps=640)
+    assert enumerate_candidates(code, TPU_V5E)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    sz=st_h.integers(4096, 65536),
+    radius=st_h.integers(1, 4),
+    d=st_h.sampled_from([4, 8, 16]),
+    s_tb=st_h.sampled_from([40, 80, 160, 320]),
+)
+def test_feasible_implies_constraints(sz, radius, d, s_tb):
+    code = CodeSpec(sz=sz, radius=radius, b_elem=4, total_steps=640)
+    hw = TPU_V5E
+    if feasible(code, hw, d, s_tb):
+        d_chk = code.d_chk(d)
+        w_tb = code.w_halo * s_tb
+        assert (d_chk + w_tb) * hw.n_streams * code.b_elem <= hw.c_dmem
+        assert w_tb <= d_chk
+        assert d > hw.n_streams
