@@ -16,8 +16,8 @@ from __future__ import annotations
 import time
 from typing import Callable
 
-from repro.core.accounting import predict_stats
-from repro.core.analytic import EngineTimes, Hardware, TPU_V5E, RTX3080_PAPER, model_times
+from repro.core.analytic import EngineTimes, Hardware, TPU_V5E, RTX3080_PAPER, times_from_plan
+from repro.core.oocore import compile_plan
 from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
 
 OOC_SZ = 38400       # out-of-core domain (11.0 GB with 2 arrays)
@@ -40,14 +40,25 @@ PAPER_SPEEDUP_VS_RESREU = {
 }
 
 
-def modeled(engine: str, name: str, sz: int, d: int, s_tb: int,
-            hw: Hardware = TPU_V5E, k_on: int = K_ON,
-            n: int = N_STEPS) -> EngineTimes:
+def paper_plan(engine: str, name: str, sz: int, d: int, s_tb: int,
+               k_on: int = K_ON, n: int = N_STEPS):
+    """Compile one engine's op schedule for a paper workload.
+
+    The single place encoding the benchmark conventions: the domain is
+    framed (``sz + 2r`` per side), ResReu is pinned to single-step
+    kernels (its defining constraint), and InCore streams the whole
+    domain as one chunk."""
     st = get_stencil(name)
     Y = X = sz + 2 * st.radius
     k_on_eff = 1 if engine == "resreu" else k_on
-    stats = predict_stats(engine, st, Y, X, n, d, s_tb, k_on_eff)
-    return model_times(stats, hw)
+    d_eff = 1 if engine == "incore" else d
+    return compile_plan(engine, st, Y, X, n, d_eff, s_tb, k_on_eff)
+
+
+def modeled(engine: str, name: str, sz: int, d: int, s_tb: int,
+            hw: Hardware = TPU_V5E, k_on: int = K_ON,
+            n: int = N_STEPS) -> EngineTimes:
+    return times_from_plan(paper_plan(engine, name, sz, d, s_tb, k_on, n), hw)
 
 
 def timeit(fn: Callable, iters: int = 3, warmup: int = 1) -> float:

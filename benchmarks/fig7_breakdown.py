@@ -1,7 +1,13 @@
 """Paper Fig. 7: execution-time breakdown (HtoD / kernel / O-D / DtoH)
 for SO2DR vs ResReu on the out-of-core dataset, TPU-v5e model.
+
+Since the plan/execute refactor the four bars are read directly off the
+compiled op schedule: each Fig. 7 category is one op type of the plan IR
+(H2D -> HtoD, FusedKernel -> kernel, BufferRead/Write -> O-D copies,
+D2H -> DtoH), so the breakdown and the executors consume the same object.
 """
-from .common import N_STEPS, OOC_SZ, PAPER_BENCHMARKS, PAPER_CONFIG, emit, modeled
+from .common import N_STEPS, OOC_SZ, PAPER_BENCHMARKS, PAPER_CONFIG, emit, paper_plan
+from repro.core.analytic import TPU_V5E, times_from_plan
 
 
 def run():
@@ -9,13 +15,16 @@ def run():
     for name in PAPER_BENCHMARKS:
         d, s_tb = PAPER_CONFIG[name]
         for engine in ("so2dr", "resreu", "naive_tb"):
-            t = modeled(engine, name, OOC_SZ, d, s_tb)
+            plan = paper_plan(engine, name, OOC_SZ, d, s_tb)
+            t = times_from_plan(plan, TPU_V5E)
+            ops = plan.op_counts()
             rows.append((
                 f"fig7/{name}/{engine}",
                 t.total_serial * 1e6 / N_STEPS,
                 f"modeled_tpu h2d={t.h2d:.3f} kernel={t.kernel:.3f} "
                 f"odc={t.odc:.4f} d2h={t.d2h:.3f} "
-                f"kmem={t.kernel_mem:.3f} kcomp={t.kernel_compute:.3f}",
+                f"kmem={t.kernel_mem:.3f} kcomp={t.kernel_compute:.3f} "
+                f"plan_ops={len(plan)} kernels={ops.get('FusedKernel', 0)}",
             ))
     return rows
 

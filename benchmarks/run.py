@@ -1,17 +1,54 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --dry-run
 
 Prints ``name,us_per_call,derived`` CSV.  Rows labeled ``measured_cpu``
 are wall-clock on this container; ``modeled`` rows evaluate the paper's
 Sec. III analytic model over exact TransferStats geometry with RTX-3080
 (paper-validation) or TPU-v5e (deployment-target) constants.  The
 roofline rows read the multi-pod dry-run artifacts if present.
+
+``--dry-run`` compiles the transfer/kernel op schedule for every engine x
+paper stencil at the full out-of-core size and walks it with the dry-run
+executor — plan construction and plan-derived accounting are exercised
+end-to-end with zero device work (the CI smoke job).
 """
+import argparse
 import sys
 
 
-def main() -> None:
+def dry_run() -> None:
+    from repro.core.executor import DryRunExecutor
+    from repro.core.oocore import ENGINES
+    from repro.core.stencil import PAPER_BENCHMARKS
+
+    from .common import OOC_SZ, PAPER_CONFIG, paper_plan
+
+    print("name,plan_ops,derived")
+    ex = DryRunExecutor()
+    for name in PAPER_BENCHMARKS:
+        d, s_tb = PAPER_CONFIG[name]
+        for engine in sorted(ENGINES):
+            plan = paper_plan(engine, name, OOC_SZ, d, s_tb)
+            _, s = ex.execute(plan)
+            print(f"dryrun/{name}/{engine},{len(plan)},"
+                  f"h2d_gb={s.h2d_bytes / 1e9:.2f} "
+                  f"d2h_gb={s.d2h_bytes / 1e9:.2f} "
+                  f"odc_gb={s.buffer_bytes / 1e9:.2f} "
+                  f"kernels={s.kernel_calls} "
+                  f"redundancy={s.redundancy:.4f}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="compile + cost every engine's plan, no device work")
+    args = ap.parse_args(argv)
+    if args.dry_run:
+        dry_run()
+        return
+
     from . import (
         autotune_bench, fig5_config_sweep, fig6_so2dr_vs_resreu,
         fig7_breakdown, fig8_single_step, fig9_incore_vs_oocore,

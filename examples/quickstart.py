@@ -1,15 +1,18 @@
-"""Quickstart: the paper's technique in 40 lines.
+"""Quickstart: the paper's technique, plan/execute style, in ~50 lines.
 
-Runs SO2DR (region sharing + redundant compute + fused k_on-step Pallas
-kernels) against ResReu and the oracle on a small out-of-core workload,
-printing the accounting that drives the paper's Fig. 6/7.
+Each engine *compiles* its schedule into a typed transfer/kernel op plan;
+pluggable executors then interpret the same plan: a zero-device dry run
+(exact accounting), the eager interpreter, and the double-buffered one
+(chunk i+1's H2D prefetched under chunk i's kernels — the paper's
+multi-stream overlap).  All three agree with the oracle / each other.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.analytic import TPU_V5E, model_times
+from repro.core.analytic import TPU_V5E, times_from_plan
+from repro.core.executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor
 from repro.core.oocore import ResReu, SO2DR
 from repro.core.reference import run_reference
 from repro.core.stencil import get_stencil
@@ -27,12 +30,20 @@ def main():
     ref = np.asarray(run_reference(jnp.asarray(x), st, n))
     for eng in (SO2DR(d=d, k_off=k_off, k_on=k_on),
                 ResReu(d=d, k_off=k_off, k_on=k_on)):
-        out, stats = eng.run(x, st, n)
+        # 1. compile: geometry -> op schedule (no arrays touched)
+        plan = eng.compile(x.shape[0], x.shape[1], st, n, itemsize=x.itemsize)
+        # 2. dry run: exact accounting straight off the plan
+        _, stats = DryRunExecutor().execute(plan)
+        # 3. execute: eager and double-buffered walk the same plan
+        out, _ = EagerExecutor().execute(plan, x)
+        out_db, _ = DoubleBufferedExecutor().execute(plan, x)
+        assert np.array_equal(out, out_db), "pipelining must not change results"
         err = np.abs(out - ref).max() / np.abs(ref).max()
-        t = model_times(stats, TPU_V5E)
+        t = times_from_plan(plan, TPU_V5E)
+        ops = plan.op_counts()
         print(f"{eng.name:8s} max_rel_err={err:.2e}  "
+              f"plan={len(plan)} ops ({ops.get('FusedKernel', 0)} kernels)  "
               f"h2d={stats.h2d_bytes/1e6:.1f}MB  "
-              f"kernel_calls={stats.kernel_calls:4d}  "
               f"redundant={stats.redundancy*100:.1f}%  "
               f"kernel_phase={t.kernel*1e6:.0f}us  "
               f"modeled_tpu_total={t.total_overlapped()*1e3:.2f}ms")

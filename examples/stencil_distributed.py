@@ -12,14 +12,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import collective_bytes_per_round, run_distributed
 from repro.core.reference import run_reference
 from repro.core.stencil import get_stencil
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     st = get_stencil("box2d1r")
     rng = np.random.default_rng(0)
     x = rng.standard_normal((256, 256)).astype(np.float32)

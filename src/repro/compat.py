@@ -1,0 +1,70 @@
+"""JAX version compatibility layer.
+
+The repo targets the newest JAX API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``), but
+deployment containers pin older releases (0.4.x) where those names either
+live under ``jax.experimental`` or do not exist.  Everything that touches
+meshes or shard_map goes through this module so the drift is absorbed in
+exactly one place.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "shard_map"]
+
+
+class _AxisTypeFallback(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on JAX < 0.6."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+AxisType = getattr(jax.sharding, "AxisType", _AxisTypeFallback)
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters
+)
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    axis_types: Optional[Sequence] = None,
+    **kwargs,
+):
+    """``jax.make_mesh`` accepting ``axis_types`` on every JAX version.
+
+    Older JAX has no ``axis_types`` parameter and treats every axis as
+    Auto — which is the only mode this repo uses — so the argument is
+    dropped when unsupported (support is probed once from the signature,
+    never by swallowing the call's own TypeErrors).
+    """
+    if _MAKE_MESH_HAS_AXIS_TYPES:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, **kwargs)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def _resolve_shard_map():
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn, "check_vma"
+    from jax.experimental.shard_map import shard_map as fn  # JAX <= 0.4.x
+    return fn, "check_rep"
+
+
+_SHARD_MAP, _CHECK_KW = _resolve_shard_map()
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the replication-check flag spelled portably
+    (``check_vma`` on new JAX, ``check_rep`` before the rename)."""
+    return _SHARD_MAP(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

@@ -1,15 +1,19 @@
-"""Geometry-only TransferStats prediction.
+"""Geometry-only TransferStats prediction — a dry run of the plan.
 
-Re-implements each engine's accounting loop without allocating the domain,
-so benchmarks can evaluate the paper's full 11 GB workloads (38400^2 fp32)
-instantly.  ``tests/test_accounting.py`` asserts bit-equality with the
-stats the real engines produce on small domains.
+Since the plan/execute refactor, every engine compiles its schedule into
+an :class:`repro.core.plan.ExecutionPlan` whose accounting is derived
+from the op stream itself, so "prediction" and "measurement" are the same
+arithmetic by construction: this module simply compiles the plan (no
+array allocation — the paper's full 11 GB workloads, 38400^2 fp32, cost
+microseconds) and walks it with the dry-run executor.
+``tests/test_accounting.py`` asserts bit-equality with the stats the real
+engines produce on small domains.
 """
 from __future__ import annotations
 
-from .oocore import TransferStats, _account_fused
+from .executor import DryRunExecutor
+from .oocore import TransferStats, compile_plan
 from .stencil import Stencil
-from .tiling import make_chunk_plan, split_steps
 
 __all__ = ["predict_stats"]
 
@@ -18,64 +22,6 @@ def predict_stats(
     engine: str, st: Stencil, Y: int, X: int, n: int,
     d: int, k_off: int, k_on: int, itemsize: int = 4,
 ) -> TransferStats:
-    r = st.radius
-    stats = TransferStats()
-    stats.exact_elements = n * (Y - 2 * r) * (X - 2 * r)
-
-    if engine == "incore":
-        stats.h2d_bytes = Y * X * itemsize
-        stats.d2h_bytes = Y * X * itemsize
-        h = Y
-        for m in split_steps(n, k_on):
-            h0 = Y
-            _account_fused(stats, st, h0, X, m, True, True, itemsize)
-        return stats
-
-    plan = make_chunk_plan(Y, X, r, d)
-    if k_off > plan.max_k_off():
-        raise ValueError("infeasible k_off")
-
-    for k in split_steps(n, k_off):
-        for i, cb in enumerate(plan.chunks):
-            first, last = i == 0, i == plan.d - 1
-            if engine == "naive_tb":
-                lo = 0 if first else cb.a - k * r
-                hi = Y if last else cb.b + k * r
-                stats.h2d_bytes += (hi - lo) * X * itemsize
-                h = hi - lo
-                for m in split_steps(k, k_on):
-                    h = _account_fused(stats, st, h, X, m, first, last, itemsize)
-                stats.d2h_bytes += cb.rows * X * itemsize
-            elif engine == "so2dr":
-                lo = 0 if first else cb.a + k * r
-                hi = Y if last else cb.b + k * r
-                stats.h2d_bytes += (hi - lo) * X * itemsize
-                if first:
-                    h = hi - lo
-                else:
-                    stats.buffer_bytes += 2 * k * r * X * itemsize  # read
-                    h = (hi - lo) + 2 * k * r
-                if not last:
-                    stats.buffer_bytes += 2 * k * r * X * itemsize  # write
-                for m in split_steps(k, k_on):
-                    h = _account_fused(stats, st, h, X, m, first, last, itemsize)
-                stats.d2h_bytes += cb.rows * X * itemsize
-            elif engine == "resreu":
-                lo = 0 if first else cb.a + k * r
-                hi = Y if last else cb.b + k * r
-                stats.h2d_bytes += (hi - lo) * X * itemsize
-                W_h = hi - lo
-                for s in range(k):
-                    if not last:
-                        stats.buffer_bytes += 2 * r * X * itemsize  # write
-                    if first:
-                        inp_h = W_h
-                    else:
-                        stats.buffer_bytes += 2 * r * X * itemsize  # read
-                        inp_h = W_h + 2 * r
-                    _account_fused(stats, st, inp_h, X, 1, first, last, itemsize)
-                    W_h = inp_h - 2 * r + (int(first) + int(last)) * r
-                stats.d2h_bytes += cb.rows * X * itemsize
-            else:
-                raise KeyError(engine)
+    plan = compile_plan(engine, st, Y, X, n, d, k_off, k_on, itemsize)
+    _, stats = DryRunExecutor().execute(plan)
     return stats

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["Hardware", "TPU_V5E", "RTX3080_PAPER", "EngineTimes", "model_times"]
+__all__ = ["Hardware", "TPU_V5E", "RTX3080_PAPER", "EngineTimes",
+           "model_times", "times_from_plan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,3 +102,14 @@ def model_times(stats, hw: Hardware) -> EngineTimes:
         kernel_mem=k_mem,
         kernel_compute=k_cmp,
     )
+
+
+def times_from_plan(plan, hw: Hardware) -> EngineTimes:
+    """Model phase times straight off a compiled
+    :class:`~repro.core.plan.ExecutionPlan`.
+
+    The Sec. III terms map 1:1 onto the plan's op categories (H2D/D2H ->
+    interconnect, BufferRead/Write -> off-chip copies, FusedKernel ->
+    kernel roofline), so the model input *is* the planned byte count —
+    there is no second accounting path to drift from."""
+    return model_times(plan.stats(), hw)

@@ -3,10 +3,16 @@
 Sec. VII: "We also plan to refine the performance model which can be used
 to automatically select the optimization target between kernel execution
 and data transfer."  This module does exactly that: for a given stencil
-code and hardware it enumerates the Sec. IV-C feasible set, evaluates the
-Sec. III model over *exact* TransferStats geometry (accounting.py — no
-array allocation), and returns the best (engine, d, S_TB, k_on) with the
-predicted bottleneck.
+code and hardware it enumerates the Sec. IV-C feasible set, *compiles the
+candidate's full transfer/kernel op schedule* (a dry-run plan — exact
+TransferStats geometry, zero engine execution, zero array allocation),
+evaluates the Sec. III model over it, and returns the best
+(engine, d, S_TB, k_on) with the predicted bottleneck.
+
+Because the winning :class:`~repro.core.plan.ExecutionPlan` is the very
+object the executors run, a selected config's measured accounting equals
+its predicted accounting field-for-field — the sweep costs what execution
+costs.
 
 Because the model is evaluated per engine, the selector also answers the
 paper's Fig. 3a question ("which term should we optimize?") automatically:
@@ -18,8 +24,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, List, Optional
 
-from .accounting import predict_stats
 from .analytic import EngineTimes, Hardware, model_times
+from .executor import DryRunExecutor
+from .oocore import compile_plan
 from .params import CodeSpec, feasible
 from .stencil import Stencil
 
@@ -69,10 +76,11 @@ def autotune(
                 k_ons = (1,) if engine == "resreu" else k_on_grid
                 for k_on in k_ons:
                     try:
-                        stats = predict_stats(engine, st, Y, X, n_steps,
-                                              d, s_tb, k_on, b_elem)
+                        plan = compile_plan(engine, st, Y, X, n_steps,
+                                            d, s_tb, k_on, b_elem)
                     except ValueError:
                         continue
+                    _, stats = DryRunExecutor().execute(plan)
                     t = model_times(stats, hw)
                     out.append(Choice(
                         engine=engine, d=d, s_tb=s_tb, k_on=k_on,

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from .stencil import Stencil, get_stencil
 
 __all__ = ["distributed_stencil_step_fn", "run_distributed", "collective_bytes_per_round"]
@@ -122,7 +123,7 @@ def distributed_stencil_step_fn(
             )
 
         spec = P(row_axis, col_axis)
-        return jax.shard_map(
+        return shard_map(
             local, mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False
         )(x)
 

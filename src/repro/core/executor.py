@@ -1,0 +1,185 @@
+"""Pluggable executors over :class:`repro.core.plan.ExecutionPlan`.
+
+Three interpreters of the same op schedule:
+
+* :class:`EagerExecutor` — walks ops in plan order; reproduces the
+  pre-refactor engine behavior bit-for-bit against the oracle.
+* :class:`DoubleBufferedExecutor` — software-pipelined: chunk ``i+1``'s
+  H2D is issued while chunk ``i``'s kernels/D2H are still in flight
+  (JAX async dispatch carries the overlap; nothing blocks until a
+  ``HostCommit`` barrier forces the staged device handles with
+  ``jax.block_until_ready``).  This is the paper's multi-stream overlap
+  (Sec. II, N_strm = 3), previously impossible with inline engine loops.
+* :class:`DryRunExecutor` — walks no device work at all and returns the
+  plan-derived :class:`TransferStats`; the autotuner costs the whole
+  configuration sweep with it.
+
+All executors return ``(host_array | None, TransferStats)`` where the
+stats always come from :meth:`ExecutionPlan.stats` — accounting is a
+property of the *plan*, not of how it was executed.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .plan import (
+    BufferRead, BufferWrite, D2H, ExecutionPlan, FusedKernel, H2D,
+    HostCommit, TransferStats,
+)
+from .reference import multi_step_band
+
+__all__ = [
+    "EagerExecutor", "DoubleBufferedExecutor", "DryRunExecutor",
+    "get_executor", "EXECUTORS",
+]
+
+# fused-step implementation signature:
+#   fn(band, stencil_name, steps, keep_top, keep_bottom) -> band
+FusedStep = Callable[..., jnp.ndarray]
+
+
+class _DeviceState:
+    """Register/buffer/staging state shared by the device executors."""
+
+    def __init__(self, host: np.ndarray, fused_step: FusedStep):
+        self.host = host
+        self.fused_step = fused_step
+        self.regs: Dict[str, jnp.ndarray] = {}
+        self.bufs: Dict[str, jnp.ndarray] = {}
+        # staged D2H handles: (host_lo, host_hi, device rows)
+        self.staged: List[Tuple[int, int, jnp.ndarray]] = []
+
+    def issue_h2d(self, op: H2D) -> None:
+        self.regs[op.reg] = jnp.asarray(self.host[op.host_lo:op.host_hi])
+
+    def issue(self, op) -> None:
+        if isinstance(op, H2D):
+            self.issue_h2d(op)
+        elif isinstance(op, BufferWrite):
+            self.bufs[op.buf] = self.regs[op.reg][op.reg_lo:op.reg_hi]
+        elif isinstance(op, BufferRead):
+            shared = self.bufs.pop(op.buf)
+            self.regs[op.reg] = jnp.concatenate(
+                [shared, self.regs.pop(op.src)], axis=0)
+        elif isinstance(op, FusedKernel):
+            self.regs[op.reg] = self.fused_step(
+                self.regs[op.reg], op.stencil, op.steps,
+                keep_top=op.keep_top, keep_bottom=op.keep_bottom)
+        elif isinstance(op, D2H):
+            band = self.regs.pop(op.reg)   # last use of the register
+            self.staged.append((op.host_lo, op.host_hi,
+                                band[op.reg_lo:op.reg_hi]))
+        elif isinstance(op, HostCommit):
+            self.commit()
+        else:  # pragma: no cover - planner/executor version skew
+            raise TypeError(f"unknown op {op!r}")
+
+    def commit(self) -> None:
+        for _, _, dev in self.staged:
+            jax.block_until_ready(dev)
+        for host_lo, host_hi, dev in self.staged:
+            self.host[host_lo:host_hi] = np.asarray(dev)
+        self.staged.clear()
+
+
+def _prepare_host(plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
+    if x.shape != (plan.Y, plan.X):
+        raise ValueError(f"domain {x.shape} does not match plan "
+                         f"({plan.Y}, {plan.X})")
+    if x.dtype.itemsize != plan.itemsize:
+        raise ValueError(f"dtype itemsize {x.dtype.itemsize} does not match "
+                         f"plan itemsize {plan.itemsize}")
+    return np.asarray(x).copy()
+
+
+class EagerExecutor:
+    """In-order interpreter: one op at a time, plan order."""
+
+    name = "eager"
+
+    def __init__(self, fused_step: Optional[FusedStep] = None):
+        self.fused_step = fused_step or multi_step_band
+
+    def execute(self, plan: ExecutionPlan,
+                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
+        state = _DeviceState(_prepare_host(plan, x), self.fused_step)
+        for op in plan.ops:
+            state.issue(op)
+        state.commit()   # no-op unless a planner forgot the final barrier
+        return state.host, plan.stats()
+
+
+class DoubleBufferedExecutor:
+    """Software-pipelined interpreter (the paper's multi-stream overlap).
+
+    Walks the plan stage-by-stage (one stage per ``(round, chunk)``).
+    Before executing stage ``i``'s kernels it issues every H2D of stage
+    ``i+1`` — legal because H2D only reads committed host rows and
+    commits are stage-group barriers — so the next chunk's transfer rides
+    under the current chunk's kernel work exactly like the paper's
+    ``N_strm = 3`` double buffering.  Correctness is untouched: data
+    dependencies flow through registers/buffers, which prefetching never
+    reorders.
+    """
+
+    name = "double_buffered"
+
+    def __init__(self, fused_step: Optional[FusedStep] = None):
+        self.fused_step = fused_step or multi_step_band
+
+    def execute(self, plan: ExecutionPlan,
+                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
+        state = _DeviceState(_prepare_host(plan, x), self.fused_step)
+        stages = plan.stages()
+        prefetched: set = set()
+        for j, (key, ops) in enumerate(stages):
+            if key is None:          # HostCommit barrier
+                for op in ops:
+                    state.issue(op)
+                continue
+            # prefetch the next chunk's H2D before touching this chunk's
+            # kernels; stop at barriers (host rows change there)
+            if j + 1 < len(stages) and stages[j + 1][0] is not None:
+                for nxt in stages[j + 1][1]:
+                    if isinstance(nxt, H2D):
+                        state.issue_h2d(nxt)
+                        prefetched.add(id(nxt))
+            for op in ops:
+                if isinstance(op, H2D) and id(op) in prefetched:
+                    continue
+                state.issue(op)
+        state.commit()
+        return state.host, plan.stats()
+
+
+class DryRunExecutor:
+    """Zero-device-work interpreter: the plan *is* the result.
+
+    Used by :mod:`repro.core.autotune` to cost the full configuration
+    sweep and by ``benchmarks/run.py --dry-run`` to exercise plan
+    construction for every engine without allocating a single device
+    array."""
+
+    name = "dry_run"
+
+    def execute(self, plan: ExecutionPlan,
+                x: Optional[np.ndarray] = None) -> Tuple[None, TransferStats]:
+        return None, plan.stats()
+
+
+EXECUTORS = {e.name: e for e in
+             (EagerExecutor, DoubleBufferedExecutor, DryRunExecutor)}
+
+
+def get_executor(name: str, fused_step: Optional[FusedStep] = None):
+    try:
+        cls = EXECUTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown executor {name!r}; known: {sorted(EXECUTORS)}")
+    if cls is DryRunExecutor:
+        return cls()
+    return cls(fused_step)

@@ -1,4 +1,4 @@
-"""Out-of-core stencil engines (the paper's Sec. II/IV, Alg. 1).
+"""Out-of-core stencil engines (the paper's Sec. II/IV, Alg. 1) as planners.
 
 Four engines, all verified equivalent to the oracle
 (:func:`repro.core.reference.run_reference`):
@@ -18,73 +18,30 @@ Four engines, all verified equivalent to the oracle
   is deliberately admitted in the overlap wedges, and kernels run
   ``k_on`` fused steps uninterrupted (Alg. 1 lines 7-14).
 
-Device emulation: host state is numpy, device state is jax; every
-host<->device movement and on-device buffer copy is tallied in
-:class:`TransferStats` for the Sec. III analytic model and the benchmarks.
+Plan/execute split: each engine is a *planner* — :meth:`_EngineBase.compile`
+turns ``(domain shape, stencil, n)`` into an
+:class:`repro.core.plan.ExecutionPlan` (a typed transfer/kernel op
+schedule), and any executor from :mod:`repro.core.executor` interprets it:
+eagerly, software-pipelined (double-buffered), or as a zero-device dry run.
+All :class:`TransferStats` accounting is derived from the plan itself.
+``run()`` is the compile-then-eager-execute convenience that preserves the
+historical engine API.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from .reference import multi_step_band, step_band
+from .executor import EagerExecutor, FusedStep
+from .plan import ExecutionPlan, PlanBuilder, TransferStats
 from .stencil import Stencil
 from .tiling import ChunkPlan, make_chunk_plan, split_steps
 
-__all__ = ["TransferStats", "InCore", "NaiveTB", "ResReu", "SO2DR", "get_engine"]
-
-# fused-step implementation signature:
-#   fn(band, stencil_name, steps, keep_top, keep_bottom) -> band
-FusedStep = Callable[..., jnp.ndarray]
-
-
-@dataclasses.dataclass
-class TransferStats:
-    """Byte/FLOP accounting for one engine run (paper Fig. 7 categories)."""
-
-    h2d_bytes: int = 0
-    d2h_bytes: int = 0
-    buffer_bytes: int = 0       # on-device region-sharing copies ("O/D")
-    kernel_calls: int = 0
-    kernel_hbm_bytes: int = 0   # per-call band read + output write traffic
-    flops: int = 0
-    elements_computed: int = 0  # element-updates incl. redundant ones
-    exact_elements: int = 0     # n * interior elements (the useful work)
-
-    @property
-    def redundant_elements(self) -> int:
-        return self.elements_computed - self.exact_elements
-
-    @property
-    def redundancy(self) -> float:
-        return self.redundant_elements / max(self.exact_elements, 1)
-
-
-def _account_fused(
-    stats: TransferStats,
-    st: Stencil,
-    h: int,
-    X: int,
-    steps: int,
-    keep_top: bool,
-    keep_bottom: bool,
-    itemsize: int,
-) -> int:
-    """Account FLOPs/bytes for one fused kernel call; returns output height."""
-    keep = (int(keep_top) + int(keep_bottom)) * st.radius
-    r = st.radius
-    stats.kernel_calls += 1
-    h_in = h
-    for _ in range(steps):
-        rows = h - 2 * r
-        stats.elements_computed += rows * (X - 2 * r)
-        stats.flops += rows * (X - 2 * r) * st.flops_per_elem
-        h = rows + keep
-    stats.kernel_hbm_bytes += (h_in + h) * X * itemsize
-    return h
+__all__ = [
+    "TransferStats", "InCore", "NaiveTB", "ResReu", "SO2DR",
+    "get_engine", "compile_plan",
+]
 
 
 class _EngineBase:
@@ -94,10 +51,10 @@ class _EngineBase:
         self.d = d
         self.k_off = k_off
         self.k_on = k_on
-        self.fused_step = fused_step or multi_step_band
+        self.fused_step = fused_step
 
-    def _plan(self, x: np.ndarray, st: Stencil) -> ChunkPlan:
-        plan = make_chunk_plan(x.shape[0], x.shape[1], st.radius, self.d)
+    def _chunks(self, Y: int, X: int, st: Stencil) -> ChunkPlan:
+        plan = make_chunk_plan(Y, X, st.radius, self.d)
         if self.k_off > plan.max_k_off():
             raise ValueError(
                 f"k_off={self.k_off} violates region-sharing feasibility "
@@ -105,12 +62,21 @@ class _EngineBase:
             )
         return plan
 
-    def run(self, x: np.ndarray, st: Stencil, n: int) -> Tuple[np.ndarray, TransferStats]:
+    def _builder(self, Y: int, X: int, st: Stencil, n: int, itemsize: int) -> PlanBuilder:
+        return PlanBuilder(self.name, st, Y, X, n, self.d, self.k_off,
+                           self.k_on, itemsize)
+
+    def compile(self, Y: int, X: int, st: Stencil, n: int,
+                itemsize: int = 4) -> ExecutionPlan:
+        """Compile the engine's schedule for a (Y, X) framed domain —
+        geometry only, no arrays touched."""
         raise NotImplementedError
 
-    def _finalize(self, stats: TransferStats, x: np.ndarray, st: Stencil, n: int) -> None:
-        r = st.radius
-        stats.exact_elements = n * (x.shape[0] - 2 * r) * (x.shape[1] - 2 * r)
+    def run(self, x: np.ndarray, st: Stencil, n: int) -> Tuple[np.ndarray, TransferStats]:
+        """Compile + eager execution (the historical engine API)."""
+        plan = self.compile(x.shape[0], x.shape[1], st, n,
+                            itemsize=x.dtype.itemsize)
+        return EagerExecutor(self.fused_step).execute(plan, x)
 
 
 class InCore(_EngineBase):
@@ -118,50 +84,42 @@ class InCore(_EngineBase):
 
     name = "incore"
 
-    def run(self, x, st, n):
-        stats = TransferStats()
-        itemsize = x.dtype.itemsize
-        dev = jnp.asarray(x)
-        stats.h2d_bytes += dev.size * itemsize
+    def compile(self, Y, X, st, n, itemsize=4):
+        b = self._builder(Y, X, st, n, itemsize)
+        b.h2d("band", 0, Y, rnd=0, chunk=0)
         for m in split_steps(n, self.k_on):
-            _account_fused(stats, st, dev.shape[0], dev.shape[1], m, True, True, itemsize)
-            dev = self.fused_step(dev, st.name, m, keep_top=True, keep_bottom=True)
-        stats.d2h_bytes += dev.size * itemsize
-        out = np.asarray(dev)
-        self._finalize(stats, x, st, n)
-        return out, stats
+            b.fused_kernel("band", m, keep_top=True, keep_bottom=True,
+                           rnd=0, chunk=0)
+        b.d2h("band", 0, Y, 0, Y, rnd=0, chunk=0)
+        b.commit(rnd=0)
+        return b.build()
 
 
 class NaiveTB(_EngineBase):
-    """Temporal blocking with redundant halo transfer (paper Fig. 1b)."""
+    """Temporal blocking with redundant halo transfer (paper Fig. 1b).
+
+    The per-round :class:`HostCommit` barrier realises the ping-pong host
+    buffer: within a round every chunk's H2D reads pre-round halo rows."""
 
     name = "naive_tb"
 
-    def run(self, x, st, n):
-        stats = TransferStats()
+    def compile(self, Y, X, st, n, itemsize=4):
         r = st.radius
-        plan = self._plan(x, st)
-        itemsize = x.dtype.itemsize
-        host = np.asarray(x).copy()
-        Y, X = host.shape
-        for k in split_steps(n, self.k_off):
-            nxt = host.copy()  # ping-pong host buffers: halos need old values
-            for i, cb in enumerate(plan.chunks):
-                first, last = i == 0, i == plan.d - 1
+        chunks = self._chunks(Y, X, st)
+        b = self._builder(Y, X, st, n, itemsize)
+        for rnd, k in enumerate(split_steps(n, self.k_off)):
+            for i, cb in enumerate(chunks.chunks):
+                first, last = i == 0, i == chunks.d - 1
+                reg = f"band:r{rnd}c{i}"
                 lo = 0 if first else cb.a - k * r
                 hi = Y if last else cb.b + k * r
-                full = jnp.asarray(host[lo:hi])
-                stats.h2d_bytes += (hi - lo) * X * itemsize
-                h = full.shape[0]
+                b.h2d(reg, lo, hi, rnd, i)
                 for m in split_steps(k, self.k_on):
-                    h = _account_fused(stats, st, h, X, m, first, last, itemsize)
-                    full = self.fused_step(full, st.name, m, keep_top=first, keep_bottom=last)
+                    b.fused_kernel(reg, m, first, last, rnd, i)
                 out_lo = 0 if first else cb.a
-                nxt[cb.a : cb.b] = np.asarray(full[cb.a - out_lo : cb.b - out_lo])
-                stats.d2h_bytes += cb.rows * X * itemsize
-            host = nxt
-        self._finalize(stats, x, st, n)
-        return host, stats
+                b.d2h(reg, cb.a - out_lo, cb.b - out_lo, cb.a, cb.b, rnd, i)
+            b.commit(rnd)
+        return b.build()
 
 
 class ResReu(_EngineBase):
@@ -173,52 +131,42 @@ class ResReu(_EngineBase):
 
     Sliding-parallelogram formulation: chunk ``i``'s working band at step
     ``s`` covers rows ``[a_i+(k-s)r, b_i+(k-s)r)`` (constant height).  Before
-    each step the chunk reads *two shared regions* (2r rows at step ``s``)
-    from the buffer and writes two for its successor — matching the paper's
-    Fig. 2b description verbatim.
+    each step the chunk writes two shared regions (2r rows at step ``s``)
+    into per-step carry buffers for its successor and reads the
+    predecessor's pair — matching the paper's Fig. 2b description verbatim.
     """
 
     name = "resreu"
 
-    def run(self, x, st, n):
-        stats = TransferStats()
+    def compile(self, Y, X, st, n, itemsize=4):
         r = st.radius
-        plan = self._plan(x, st)
-        if min(c.rows for c in plan.chunks) < 2 * r and plan.d > 1:
+        chunks = self._chunks(Y, X, st)
+        if min(c.rows for c in chunks.chunks) < 2 * r and chunks.d > 1:
             raise ValueError("ResReu region sharing needs chunks of >= 2r rows")
-        itemsize = x.dtype.itemsize
-        host = np.asarray(x).copy()
-        Y, X = host.shape
-        for k in split_steps(n, self.k_off):
-            carry = None  # carry[s]: 2r rows [b_i - 2r, b_i) + (k-s)r offset, step s
-            for i, cb in enumerate(plan.chunks):
-                first, last = i == 0, i == plan.d - 1
-                # transfer: only rows no neighbour already holds
+        b = self._builder(Y, X, st, n, itemsize)
+        for rnd, k in enumerate(split_steps(n, self.k_off)):
+            for i, cb in enumerate(chunks.chunks):
+                first, last = i == 0, i == chunks.d - 1
+                reg = f"band:r{rnd}c{i}"
                 lo = 0 if first else cb.a + k * r
                 hi = Y if last else cb.b + k * r
-                W = jnp.asarray(host[lo:hi])
-                stats.h2d_bytes += (hi - lo) * X * itemsize
-                new_carry = []
+                b.h2d(reg, lo, hi, rnd, i)
                 for s in range(k):
                     if not last:
-                        # write two shared regions (2r rows at step s)
-                        new_carry.append(W[-2 * r :])
-                        stats.buffer_bytes += 2 * r * X * itemsize  # write
-                    if first:
-                        inp = W  # covers [0, b0 + (k-s)r)
-                    else:
-                        # read two shared regions from the buffer
-                        inp = jnp.concatenate([carry[s], W], axis=0)
-                        stats.buffer_bytes += 2 * r * X * itemsize  # read
-                    _account_fused(stats, st, inp.shape[0], X, 1, first, last, itemsize)
-                    W = step_band(inp, st, keep_top=first, keep_bottom=last)
-                carry = new_carry
-                # W covers [0, b0) / [a_i, b_i) / [a_i, Y)
+                        # write the shared-region pair for chunk i+1
+                        h = b.height(reg)
+                        b.buffer_write(f"carry:r{rnd}c{i}s{s}", reg,
+                                       h - 2 * r, h, rnd, i)
+                    if not first:
+                        # read the predecessor's pair
+                        b.buffer_read(reg, f"carry:r{rnd}c{i - 1}s{s}", reg,
+                                      rnd, i)
+                    b.fused_kernel(reg, 1, first, last, rnd, i)
+                # band covers [0, b0) / [a_i, b_i) / [a_i, Y)
                 off = cb.a if first else 0
-                host[cb.a : cb.b] = np.asarray(W[off : off + cb.rows])
-                stats.d2h_bytes += cb.rows * X * itemsize
-        self._finalize(stats, x, st, n)
-        return host, stats
+                b.d2h(reg, off, off + cb.rows, cb.a, cb.b, rnd, i)
+            b.commit(rnd)
+        return b.build()
 
 
 class SO2DR(_EngineBase):
@@ -228,45 +176,36 @@ class SO2DR(_EngineBase):
 
     name = "so2dr"
 
-    def run(self, x, st, n):
-        stats = TransferStats()
+    def compile(self, Y, X, st, n, itemsize=4):
         r = st.radius
-        plan = self._plan(x, st)
-        itemsize = x.dtype.itemsize
-        host = np.asarray(x).copy()
-        Y, X = host.shape
-        for k in split_steps(n, self.k_off):
-            buffer = None  # rows [b_{i-1} - kr, b_{i-1} + kr) at step 0
-            for i, cb in enumerate(plan.chunks):
-                first, last = i == 0, i == plan.d - 1
+        chunks = self._chunks(Y, X, st)
+        b = self._builder(Y, X, st, n, itemsize)
+        for rnd, k in enumerate(split_steps(n, self.k_off)):
+            for i, cb in enumerate(chunks.chunks):
+                first, last = i == 0, i == chunks.d - 1
+                reg = f"band:r{rnd}c{i}"
                 # transfer: everything the sharing buffer doesn't provide
                 lo = 0 if first else cb.a + k * r
                 hi = Y if last else cb.b + k * r
-                h2d = jnp.asarray(host[lo:hi])
-                stats.h2d_bytes += (hi - lo) * X * itemsize
+                b.h2d(reg, lo, hi, rnd, i)
                 if first:
-                    full = h2d
                     full_start = 0
                 else:
-                    full = jnp.concatenate([buffer, h2d], axis=0)
+                    b.buffer_read(reg, f"share:r{rnd}c{i - 1}", reg, rnd, i)
                     full_start = cb.a - k * r
-                    stats.buffer_bytes += buffer.size * itemsize  # read
                 if not last:
-                    # line 6 of Alg. 1: write shared region for chunk i+1
+                    # line 6 of Alg. 1: rows [b_i - kr, b_i + kr) for chunk i+1
                     sl = (cb.b - k * r) - full_start
-                    buffer = full[sl : sl + 2 * k * r]
-                    stats.buffer_bytes += buffer.size * itemsize  # write
+                    b.buffer_write(f"share:r{rnd}c{i}", reg, sl,
+                                   sl + 2 * k * r, rnd, i)
                 # lines 7-14: uninterrupted fused kernels, shrinking area
-                h = full.shape[0]
                 for m in split_steps(k, self.k_on):
-                    h = _account_fused(stats, st, h, X, m, first, last, itemsize)
-                    full = self.fused_step(full, st.name, m, keep_top=first, keep_bottom=last)
-                # full covers [0, b0) / [a_i, b_i) / [a_i, Y)
+                    b.fused_kernel(reg, m, first, last, rnd, i)
+                # band covers [0, b0) / [a_i, b_i) / [a_i, Y)
                 off = cb.a if first else 0
-                host[cb.a : cb.b] = np.asarray(full[off : off + cb.rows])
-                stats.d2h_bytes += cb.rows * X * itemsize
-        self._finalize(stats, x, st, n)
-        return host, stats
+                b.d2h(reg, off, off + cb.rows, cb.a, cb.b, rnd, i)
+            b.commit(rnd)
+        return b.build()
 
 
 ENGINES = {e.name: e for e in (InCore, NaiveTB, ResReu, SO2DR)}
@@ -278,3 +217,11 @@ def get_engine(name: str, d: int, k_off: int, k_on: int, fused_step=None) -> _En
     except KeyError:
         raise KeyError(f"unknown engine {name!r}; known: {sorted(ENGINES)}")
     return cls(d=d, k_off=k_off, k_on=k_on, fused_step=fused_step)
+
+
+def compile_plan(engine: str, st: Stencil, Y: int, X: int, n: int,
+                 d: int, k_off: int, k_on: int, itemsize: int = 4) -> ExecutionPlan:
+    """Compile one engine configuration into its op schedule — the
+    geometry-only entry point used by accounting and the autotuner."""
+    return get_engine(engine, d=d, k_off=k_off, k_on=k_on).compile(
+        Y, X, st, n, itemsize=itemsize)

@@ -1,0 +1,357 @@
+"""Typed op IR for out-of-core stencil schedules (plan/execute split).
+
+Every engine in :mod:`repro.core.oocore` is a *planner*: it compiles
+``(domain shape, stencil, d, k_off, k_on, n)`` into an
+:class:`ExecutionPlan` — a flat sequence of ops over named device
+*registers* (working bands) and named device *buffers* (region-sharing
+carries).  The executors in :mod:`repro.core.executor` then interpret the
+same plan eagerly, software-pipelined, or as a zero-device dry run.
+
+Op vocabulary (the paper's Fig. 7 cost categories map 1:1 onto op types):
+
+=============  =============================================  ===========
+op             semantics                                      Fig. 7 bar
+=============  =============================================  ===========
+H2D            ``reg = host[host_lo:host_hi]``                HtoD
+BufferWrite    ``buffer[buf] = reg[reg_lo:reg_hi]``           O/D copy
+BufferRead     ``reg = concat(buffer[buf], reg[src])``        O/D copy
+FusedKernel    ``reg = fused_step(reg, steps, keeps)``        Kernel
+D2H            stage ``reg[reg_lo:reg_hi] -> host rows``      DtoH
+HostCommit     flush staged D2H rows into the host array      (barrier)
+=============  =============================================  ===========
+
+Each op carries its exact byte count and ``(round, chunk)`` provenance, so
+:meth:`ExecutionPlan.stats` derives the full :class:`TransferStats` —
+h2d/d2h/buffer/kernel bytes, FLOPs, redundancy — from the plan alone,
+with zero device work.  That is what lets the autotuner cost the whole
+``(d, k_off, k_on)`` sweep analytically and what keeps the measured and
+predicted accounting equal *by construction*.
+
+``HostCommit`` is the only ordering barrier an executor must respect:
+ops between two commits may be reordered/overlapped as long as
+register/buffer data dependencies hold (the double-buffered executor
+exploits exactly this to prefetch chunk ``i+1``'s H2D under chunk ``i``'s
+kernels).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Tuple, Union
+
+__all__ = [
+    "TransferStats",
+    "H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel", "HostCommit",
+    "Op", "ExecutionPlan", "PlanBuilder",
+]
+
+
+@dataclasses.dataclass
+class TransferStats:
+    """Byte/FLOP accounting for one engine run (paper Fig. 7 categories)."""
+
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    buffer_bytes: int = 0       # on-device region-sharing copies ("O/D")
+    kernel_calls: int = 0
+    kernel_hbm_bytes: int = 0   # per-call band read + output write traffic
+    flops: int = 0
+    elements_computed: int = 0  # element-updates incl. redundant ones
+    exact_elements: int = 0     # n * interior elements (the useful work)
+
+    @property
+    def redundant_elements(self) -> int:
+        return self.elements_computed - self.exact_elements
+
+    @property
+    def redundancy(self) -> float:
+        return self.redundant_elements / max(self.exact_elements, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class H2D:
+    """Load host rows ``[host_lo, host_hi)`` into register ``reg``."""
+
+    reg: str
+    host_lo: int
+    host_hi: int
+    nbytes: int
+    round: int
+    chunk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class D2H:
+    """Stage register rows ``[reg_lo, reg_hi)`` for host rows
+    ``[host_lo, host_hi)``; visible on host after the next HostCommit.
+    The register is dead afterwards (planners emit D2H as its last use)."""
+
+    reg: str
+    reg_lo: int
+    reg_hi: int
+    host_lo: int
+    host_hi: int
+    nbytes: int
+    round: int
+    chunk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferWrite:
+    """On-device copy of register rows ``[reg_lo, reg_hi)`` into the named
+    region-sharing buffer ``buf`` (paper: the O/D traffic of Alg. 1 l. 6 /
+    Fig. 2b's shared regions)."""
+
+    buf: str
+    reg: str
+    reg_lo: int
+    reg_hi: int
+    nbytes: int
+    round: int
+    chunk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BufferRead:
+    """``reg = concat(buffer[buf], reg[src])`` — consume a shared region
+    (each buffer is written once and read exactly once, by the next
+    chunk)."""
+
+    reg: str
+    buf: str
+    src: str
+    nbytes: int      # bytes of the buffer rows read
+    rows: int        # buffer rows prepended
+    round: int
+    chunk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedKernel:
+    """``steps`` fused stencil steps on register ``reg`` (in place).
+
+    Carries the full kernel-phase accounting, precomputed at plan time:
+    the compute area shrinks by ``r`` per step on non-frame sides, HBM
+    traffic is one input-band read + one output-band write."""
+
+    reg: str
+    stencil: str
+    steps: int
+    keep_top: bool
+    keep_bottom: bool
+    h_in: int
+    h_out: int
+    width: int
+    hbm_bytes: int
+    flops: int
+    elements: int    # element-updates incl. redundant ones
+    round: int
+    chunk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HostCommit:
+    """Flush all staged D2H writes to the host array.
+
+    A scheduling barrier: ops must not be moved across it (NaiveTB's
+    ping-pong host state relies on round ``t+1`` reading pre-commit rows
+    of round ``t``)."""
+
+    nbytes: int      # staged bytes flushed by this commit
+    round: int
+
+
+Op = Union[H2D, D2H, BufferWrite, BufferRead, FusedKernel, HostCommit]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A compiled transfer/kernel schedule for one engine configuration."""
+
+    engine: str
+    stencil: str
+    Y: int
+    X: int
+    itemsize: int
+    n: int
+    d: int
+    k_off: int
+    k_on: int
+    exact_elements: int
+    ops: Tuple[Op, ...]
+
+    def __iter__(self) -> Iterator[Op]:
+        return iter(self.ops)
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+    def stats(self) -> TransferStats:
+        """Derive the complete :class:`TransferStats` from the op stream.
+
+        This is the single source of truth for accounting: the dry-run
+        executor returns it untouched, and the eager/double-buffered
+        executors return it alongside the computed domain."""
+        s = TransferStats(exact_elements=self.exact_elements)
+        for op in self.ops:
+            if isinstance(op, H2D):
+                s.h2d_bytes += op.nbytes
+            elif isinstance(op, D2H):
+                s.d2h_bytes += op.nbytes
+            elif isinstance(op, (BufferWrite, BufferRead)):
+                s.buffer_bytes += op.nbytes
+            elif isinstance(op, FusedKernel):
+                s.kernel_calls += 1
+                s.kernel_hbm_bytes += op.hbm_bytes
+                s.flops += op.flops
+                s.elements_computed += op.elements
+        return s
+
+    def breakdown(self) -> Dict[str, int]:
+        """Per-category byte totals (the paper's Fig. 7 bars) read
+        directly off the op stream."""
+        s = self.stats()
+        return {
+            "h2d": s.h2d_bytes,
+            "d2h": s.d2h_bytes,
+            "odc": s.buffer_bytes,
+            "kernel_hbm": s.kernel_hbm_bytes,
+        }
+
+    def op_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for op in self.ops:
+            k = type(op).__name__
+            out[k] = out.get(k, 0) + 1
+        return out
+
+    def stages(self) -> List[Tuple[Optional[Tuple[int, int]], List[Op]]]:
+        """Group ops into pipeline stages.
+
+        Returns ``[(key, ops), ...]`` where ``key`` is ``(round, chunk)``
+        for chunk work and ``None`` for a HostCommit barrier.  Stage order
+        equals plan order; the double-buffered executor prefetches the
+        next stage's H2D ops while the current stage's kernels are in
+        flight, never crossing a barrier."""
+        out: List[Tuple[Optional[Tuple[int, int]], List[Op]]] = []
+        for op in self.ops:
+            if isinstance(op, HostCommit):
+                out.append((None, [op]))
+                continue
+            key = (op.round, op.chunk)
+            if out and out[-1][0] == key:
+                out[-1][1].append(op)
+            else:
+                out.append((key, [op]))
+        return out
+
+
+def fused_kernel_geometry(
+    radius: int, flops_per_elem: int, h: int, X: int, steps: int,
+    keep_top: bool, keep_bottom: bool, itemsize: int,
+) -> Tuple[int, int, int, int]:
+    """Accounting for one fused kernel call.
+
+    Returns ``(h_out, hbm_bytes, flops, elements)``: the band shrinks by
+    ``r`` rows per step on each non-frame side; HBM traffic is one read of
+    the input band plus one write of the output band."""
+    keep = (int(keep_top) + int(keep_bottom)) * radius
+    r = radius
+    h_in = h
+    flops = 0
+    elements = 0
+    for _ in range(steps):
+        rows = h - 2 * r
+        elements += rows * (X - 2 * r)
+        flops += rows * (X - 2 * r) * flops_per_elem
+        h = rows + keep
+    hbm_bytes = (h_in + h) * X * itemsize
+    return h, hbm_bytes, flops, elements
+
+
+class PlanBuilder:
+    """Validating builder the engine planners drive.
+
+    Tracks register/buffer heights so every emitted op's byte count and
+    geometry are consistent; catches planner bugs (reading an unwritten
+    buffer, double-reading a carry, kernel on a dead register) at compile
+    time instead of at execution time."""
+
+    def __init__(self, engine: str, stencil, Y: int, X: int, n: int,
+                 d: int, k_off: int, k_on: int, itemsize: int):
+        self.engine = engine
+        self.st = stencil
+        self.Y, self.X = Y, X
+        self.n, self.d, self.k_off, self.k_on = n, d, k_off, k_on
+        self.itemsize = itemsize
+        self.ops: List[Op] = []
+        self._reg_h: Dict[str, int] = {}      # live register -> rows
+        self._buf_h: Dict[str, int] = {}      # unread buffer -> rows
+        self._staged_bytes = 0
+
+    def _row_bytes(self, rows: int) -> int:
+        return rows * self.X * self.itemsize
+
+    def height(self, reg: str) -> int:
+        """Current rows of a live register (planners use it to address
+        slices relative to the evolving band)."""
+        return self._reg_h[reg]
+
+    def h2d(self, reg: str, host_lo: int, host_hi: int, rnd: int, chunk: int) -> None:
+        assert 0 <= host_lo < host_hi <= self.Y, (host_lo, host_hi)
+        assert reg not in self._reg_h, f"register {reg!r} already live"
+        self._reg_h[reg] = host_hi - host_lo
+        self.ops.append(H2D(reg, host_lo, host_hi,
+                            self._row_bytes(host_hi - host_lo), rnd, chunk))
+
+    def buffer_write(self, buf: str, reg: str, reg_lo: int, reg_hi: int,
+                     rnd: int, chunk: int) -> None:
+        h = self._reg_h[reg]
+        assert 0 <= reg_lo < reg_hi <= h, (reg_lo, reg_hi, h)
+        assert buf not in self._buf_h, f"buffer {buf!r} written twice"
+        self._buf_h[buf] = reg_hi - reg_lo
+        self.ops.append(BufferWrite(buf, reg, reg_lo, reg_hi,
+                                    self._row_bytes(reg_hi - reg_lo), rnd, chunk))
+
+    def buffer_read(self, reg: str, buf: str, src: str, rnd: int, chunk: int) -> None:
+        rows = self._buf_h.pop(buf)   # each shared region is consumed once
+        src_h = self._reg_h.pop(src)
+        self._reg_h[reg] = rows + src_h
+        self.ops.append(BufferRead(reg, buf, src, self._row_bytes(rows),
+                                   rows, rnd, chunk))
+
+    def fused_kernel(self, reg: str, steps: int, keep_top: bool,
+                     keep_bottom: bool, rnd: int, chunk: int) -> None:
+        h = self._reg_h[reg]
+        h_out, hbm, flops, elems = fused_kernel_geometry(
+            self.st.radius, self.st.flops_per_elem, h, self.X, steps,
+            keep_top, keep_bottom, self.itemsize)
+        self._reg_h[reg] = h_out
+        self.ops.append(FusedKernel(reg, self.st.name, steps, keep_top,
+                                    keep_bottom, h, h_out, self.X, hbm,
+                                    flops, elems, rnd, chunk))
+
+    def d2h(self, reg: str, reg_lo: int, reg_hi: int, host_lo: int,
+            host_hi: int, rnd: int, chunk: int) -> None:
+        h = self._reg_h.pop(reg)      # last use: the register dies here
+        assert 0 <= reg_lo < reg_hi <= h, (reg_lo, reg_hi, h)
+        assert reg_hi - reg_lo == host_hi - host_lo
+        nbytes = self._row_bytes(reg_hi - reg_lo)
+        self._staged_bytes += nbytes
+        self.ops.append(D2H(reg, reg_lo, reg_hi, host_lo, host_hi,
+                            nbytes, rnd, chunk))
+
+    def commit(self, rnd: int) -> None:
+        self.ops.append(HostCommit(self._staged_bytes, rnd))
+        self._staged_bytes = 0
+
+    def build(self) -> ExecutionPlan:
+        assert not self._reg_h, f"leaked registers: {sorted(self._reg_h)}"
+        assert not self._buf_h, f"unread buffers: {sorted(self._buf_h)}"
+        assert self._staged_bytes == 0, "uncommitted D2H rows at end of plan"
+        r = self.st.radius
+        exact = self.n * (self.Y - 2 * r) * (self.X - 2 * r)
+        return ExecutionPlan(
+            engine=self.engine, stencil=self.st.name, Y=self.Y, X=self.X,
+            itemsize=self.itemsize, n=self.n, d=self.d, k_off=self.k_off,
+            k_on=self.k_on, exact_elements=exact, ops=tuple(self.ops),
+        )

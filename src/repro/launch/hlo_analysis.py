@@ -169,7 +169,14 @@ def _operands(rhs: str, op: str, type_str: str) -> List[str]:
                 cur.append(ch)
     if cur:
         out.append("".join(cur).strip())
-    return [o.lstrip("%") for o in out if o.startswith("%")]
+    # operands may be bare ("%name") or typed ("f32[8,8]{1,0} %name")
+    # depending on the XLA version's dump format — take the %name token
+    names: List[str] = []
+    for o in out:
+        m = re.search(r"%([\w.\-]+)", o)
+        if m:
+            names.append(m.group(1))
+    return names
 
 
 def _trip_count(cond_body: List[str]) -> int:

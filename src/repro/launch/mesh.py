@@ -5,7 +5,7 @@ touches jax device state.
 """
 from __future__ import annotations
 
-import jax
+from ..compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "data_axes"]
 
@@ -13,10 +13,7 @@ __all__ = ["make_production_mesh", "data_axes"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def data_axes(mesh) -> tuple:

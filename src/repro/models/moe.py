@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from ..compat import shard_map
 from .layers import dense_init
 
 __all__ = ["moe_init", "moe_apply", "set_moe_block_dispatch"]
@@ -140,7 +141,7 @@ def _moe_shard_map_apply(p, cfg: ArchConfig, x: jnp.ndarray):
         return y.reshape(Bl, Sl, D), aux
 
     bf = jnp.bfloat16
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None), P(None, None, tp),
                   P(None, None, tp), P(None, tp, None)),

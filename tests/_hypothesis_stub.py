@@ -1,0 +1,91 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+The real dependency is declared in ``pyproject.toml`` (test extras), but
+this container image does not ship it and installing packages is not an
+option.  ``conftest.py`` installs this stub into ``sys.modules`` only when
+the real package is absent, so environments with hypothesis installed are
+unaffected.
+
+Only the surface the test-suite uses is provided: ``given`` / ``settings``
+decorators and the ``integers`` / ``sampled_from`` / ``booleans``
+strategies.  Examples are drawn from a fixed-seed PRNG, so runs are
+reproducible (no shrinking, no database).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def given(**strategy_kwargs):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0xD0D0)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # pytest collects the wrapper: hide the strategy-filled parameters
+        # so they are not mistaken for fixtures
+        params = [
+            p for p in inspect.signature(fn).parameters.values()
+            if p.name not in strategy_kwargs
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register the stub as the ``hypothesis`` package in ``sys.modules``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.sampled_from = sampled_from
+    strategies.booleans = booleans
+    mod.strategies = strategies
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -1,0 +1,17 @@
+"""Test-session setup.
+
+Falls back to the deterministic in-tree hypothesis stub when the real
+package (declared in pyproject.toml's ``test`` extra) is not installed,
+so the property tests stay runnable on minimal containers.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - trivial import probe
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_stub import install
+
+    install()

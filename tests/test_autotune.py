@@ -1,8 +1,11 @@
 """Autotuner (paper Sec. VII future work): selection sanity + optimality."""
+import dataclasses
+
 import numpy as np
 
 from repro.core.analytic import RTX3080_PAPER, TPU_V5E
 from repro.core.autotune import autotune, optimization_target
+from repro.core.oocore import get_engine
 from repro.core.stencil import get_stencil
 
 
@@ -35,6 +38,27 @@ def test_optimization_target_matches_paper_fig3():
     st = get_stencil("box2d1r")
     tgt = optimization_target(st, 38400, 640, RTX3080_PAPER)
     assert tgt == "kernel"
+
+
+def test_selected_config_predicted_stats_match_measured():
+    """The sweep is costed on dry-run plans only; executing the winning
+    config for real must reproduce the predicted accounting exactly."""
+    from repro.core.accounting import predict_stats
+
+    st = get_stencil("box2d1r")
+    sz, n = 256, 40
+    ranked = autotune(st, sz, n, TPU_V5E, d_grid=(4,),
+                      s_tb_grid=(20, 40), k_on_grid=(1, 2, 4))
+    assert ranked, "feasible set empty"
+    best = ranked[0]
+    Y = X = sz + 2 * st.radius
+    x = np.random.default_rng(7).standard_normal((Y, X)).astype(np.float32)
+    eng = get_engine(best.engine, d=best.d, k_off=best.s_tb, k_on=best.k_on)
+    _, measured = eng.run(x, st, n)
+    predicted = predict_stats(best.engine, st, Y, X, n,
+                              best.d, best.s_tb, best.k_on)
+    for f in dataclasses.fields(measured):
+        assert getattr(measured, f.name) == getattr(predicted, f.name), f.name
 
 
 def test_ranked_times_are_sorted_and_positive():

@@ -12,6 +12,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import (
     collective_bytes_per_round, run_distributed,
 )
@@ -22,12 +23,13 @@ _SUBPROC = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import AxisType, make_mesh
 from repro.core.distributed import run_distributed
 from repro.core.reference import run_reference
 from repro.core.stencil import get_stencil
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"),
+                 axis_types=(AxisType.Auto,) * 2)
 rng = np.random.default_rng(2)
 for name in ("box2d1r", "gradient2d", "box2d2r"):
     st = get_stencil(name)
@@ -52,8 +54,8 @@ def test_distributed_multidevice_subprocess():
 
 def test_distributed_single_device_mesh():
     """k_ici sweep on a trivial 1x1 mesh (runs in-process)."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     st = get_stencil("box2d1r")
     rng = np.random.default_rng(5)
     x = rng.standard_normal((32, 32)).astype(np.float32)

@@ -12,6 +12,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.compat import AxisType, make_mesh
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_smoke_config
 from repro.models.api import build_model
@@ -21,8 +22,8 @@ cfg = get_smoke_config("qwen3-0.6b")
 model = build_model(cfg)
 params = model.init_params(jax.random.PRNGKey(0))
 
-mesh4 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh4 = make_mesh((4, 2), ("data", "model"),
+                  axis_types=(AxisType.Auto,) * 2)
 sh4 = replan(cfg, jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0))), mesh4)
 p4 = jax.tree.map(jax.device_put, params, sh4)
 
@@ -32,8 +33,8 @@ mgr = CheckpointManager(d)
 mgr.save(1, p4, extra_meta={"mesh": [4, 2]})
 
 # "failure": restart on a smaller mesh (2 devices)
-mesh2 = jax.make_mesh((2, 1), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh2 = make_mesh((2, 1), ("data", "model"),
+                  axis_types=(AxisType.Auto,) * 2)
 restored, meta = mgr.restore(params)
 sh2 = replan(cfg, jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0))), mesh2)
 p2 = reshard_restored(restored, sh2)

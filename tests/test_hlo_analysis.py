@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 
+from repro.compat import AxisType, make_mesh, shard_map
 from repro.launch.hlo_analysis import analyze_hlo
 
 
@@ -63,16 +64,15 @@ def test_nested_scan_multiplies():
 
 def test_collectives_counted():
     import numpy as np
-    mesh = jax.make_mesh((1,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
 
     def f(x):
         return jax.lax.psum(x @ x, "d")
 
     x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
     with mesh:
-        g = jax.shard_map(f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),),
-                          out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+        g = shard_map(f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),),
+                      out_specs=jax.sharding.PartitionSpec(), check_vma=False)
         txt = jax.jit(g).lower(x).compile().as_text()
     c = analyze_hlo(txt)
     # single-device psum may fold away; just check the parser doesn't crash

@@ -1,0 +1,135 @@
+"""Plan/execute architecture: one op schedule, three executors.
+
+For every engine x paper stencil: the dry-run executor's plan-derived
+TransferStats must equal the eager executor's field-for-field (accounting
+is a property of the plan, not of execution), and the eager and
+double-buffered executors must produce identical arrays matching the
+oracle.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.executor import (
+    DoubleBufferedExecutor, DryRunExecutor, EagerExecutor, get_executor,
+)
+from repro.core.oocore import ENGINES, compile_plan, get_engine
+from repro.core.plan import (
+    BufferRead, BufferWrite, D2H, FusedKernel, H2D, HostCommit,
+)
+from repro.core.reference import run_reference
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+
+RNG = np.random.default_rng(11)
+
+N, D, K_OFF, K_ON = 8, 4, 4, 2
+
+
+def _domain(st, rows=64, cols=36):
+    Y, X = rows + 2 * st.radius, cols + 2 * st.radius
+    return RNG.standard_normal((Y, X)).astype(np.float32)
+
+
+def _plan_for(engine, st, x):
+    d = 1 if engine == "incore" else D
+    return compile_plan(engine, st, x.shape[0], x.shape[1], N, d, K_OFF, K_ON)
+
+
+@pytest.mark.parametrize("name", PAPER_BENCHMARKS)
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_dry_run_stats_equal_eager_stats(engine, name):
+    st = get_stencil(name)
+    x = _domain(st)
+    plan = _plan_for(engine, st, x)
+    _, dry = DryRunExecutor().execute(plan)        # no domain array at all
+    _, eager = EagerExecutor().execute(plan, x)
+    for f in dataclasses.fields(eager):
+        assert getattr(dry, f.name) == getattr(eager, f.name), (engine, f.name)
+    assert dry.redundancy == eager.redundancy
+
+
+@pytest.mark.parametrize("name", PAPER_BENCHMARKS)
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_executors_match_oracle(engine, name):
+    st = get_stencil(name)
+    x = _domain(st)
+    plan = _plan_for(engine, st, x)
+    ref = np.asarray(run_reference(jnp.asarray(x), st, N))
+    scale = np.abs(ref).max() + 1e-6
+    out_eager, _ = EagerExecutor().execute(plan, x)
+    out_db, _ = DoubleBufferedExecutor().execute(plan, x)
+    assert np.abs(out_eager - ref).max() / scale < 1e-5, engine
+    # pipelining is a pure reordering: results must be bitwise identical
+    np.testing.assert_array_equal(out_eager, out_db)
+
+
+def test_plan_ops_carry_provenance_and_bytes():
+    st = get_stencil("box2d2r")
+    x = _domain(st)
+    plan = _plan_for("so2dr", st, x)
+    X, itemsize = x.shape[1], x.dtype.itemsize
+    rounds = -(-N // K_OFF)
+    seen = set()
+    for op in plan:
+        if isinstance(op, HostCommit):
+            continue
+        assert 0 <= op.round < rounds
+        assert 0 <= op.chunk < D
+        seen.add(type(op))
+        if isinstance(op, (H2D, D2H)):
+            assert op.nbytes == (op.host_hi - op.host_lo) * X * itemsize
+        elif isinstance(op, BufferWrite):
+            assert op.nbytes == (op.reg_hi - op.reg_lo) * X * itemsize
+        elif isinstance(op, BufferRead):
+            assert op.nbytes == op.rows * X * itemsize
+        elif isinstance(op, FusedKernel):
+            assert op.hbm_bytes == (op.h_in + op.h_out) * X * itemsize
+    assert seen == {H2D, D2H, BufferWrite, BufferRead, FusedKernel}
+
+
+def test_double_buffered_prefetches_next_chunk():
+    """The pipelined schedule must put chunk i+1's H2D before chunk i's
+    last kernel — visible in the stage structure the executor walks."""
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    plan = _plan_for("so2dr", st, x)
+    stages = plan.stages()
+    chunk_keys = [k for k, _ in stages if k is not None]
+    # one stage per (round, chunk), in schedule order, commits between rounds
+    assert chunk_keys == [(r, c) for r in range(len(set(r for r, _ in chunk_keys)))
+                          for c in range(D)]
+    barrier_idx = [i for i, (k, _) in enumerate(stages) if k is None]
+    assert len(barrier_idx) == len(set(r for r, _ in chunk_keys))
+
+
+def test_breakdown_matches_stats():
+    st = get_stencil("gradient2d")
+    x = _domain(st)
+    plan = _plan_for("resreu", st, x)
+    s = plan.stats()
+    b = plan.breakdown()
+    assert b == {"h2d": s.h2d_bytes, "d2h": s.d2h_bytes,
+                 "odc": s.buffer_bytes, "kernel_hbm": s.kernel_hbm_bytes}
+
+
+def test_get_executor_registry():
+    assert type(get_executor("eager")) is EagerExecutor
+    assert type(get_executor("double_buffered")) is DoubleBufferedExecutor
+    assert type(get_executor("dry_run")) is DryRunExecutor
+    with pytest.raises(KeyError):
+        get_executor("speculative")
+
+
+def test_run_api_is_compile_plus_eager():
+    """The historical engine.run() facade returns exactly what
+    compile + EagerExecutor return."""
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    eng = get_engine("so2dr", d=D, k_off=K_OFF, k_on=K_ON)
+    out_run, stats_run = eng.run(x, st, N)
+    plan = eng.compile(x.shape[0], x.shape[1], st, N, itemsize=x.dtype.itemsize)
+    out_ex, stats_ex = EagerExecutor().execute(plan, x)
+    np.testing.assert_array_equal(out_run, out_ex)
+    assert stats_run == stats_ex
