@@ -1,0 +1,92 @@
+"""CI bench-gate: fail when planned wire bytes regress vs the baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression BENCH_plan.json
+
+Compares the dry-run plan records produced by
+``python -m benchmarks.run --dry-run --codec all --json BENCH_plan.json``
+against the committed ``benchmarks/baselines.json``:
+
+* a baseline key missing from the current run is an error (coverage
+  regressed — an engine/codec stopped compiling);
+* ``wire_bytes`` above baseline by more than ``--tolerance`` (relative)
+  is an error (a planner or codec change made transfers fatter);
+* new keys are reported but allowed (refresh the baseline to start
+  gating them).
+
+Wire bytes are modeled at plan time, so the signal is deterministic:
+any diff is a real scheduling/codec change, never measurement noise.
+The tolerance only absorbs intentional sub-percent accounting tweaks.
+
+Exit code 0 = gate passes, 1 = regression, 2 = bad invocation.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baselines.json"
+
+GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes")
+
+
+def check(current: dict, baseline: dict, tolerance: float):
+    """Return (errors, notes) comparing current plan records to baseline."""
+    errors, notes = [], []
+    for key, base in sorted(baseline.items()):
+        cur = current.get(key)
+        if cur is None:
+            errors.append(f"{key}: present in baseline but missing from run")
+            continue
+        for field in GATED_FIELDS:
+            if field not in base:
+                continue
+            if field not in cur:
+                # schema drift must not silently erode the gate
+                errors.append(f"{key}: gated field {field!r} missing from run")
+                continue
+            allowed = base[field] * (1.0 + tolerance)
+            if cur[field] > allowed:
+                errors.append(
+                    f"{key}: {field} regressed {base[field]} -> {cur[field]} "
+                    f"(+{(cur[field] / max(base[field], 1) - 1) * 100:.2f}%, "
+                    f"tolerance {tolerance * 100:.1f}%)")
+    for key in sorted(set(current) - set(baseline)):
+        notes.append(f"{key}: new (not gated; refresh baselines.json to gate)")
+    return errors, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="BENCH_plan.json from the current run")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="committed baseline (default: benchmarks/baselines.json)")
+    ap.add_argument("--tolerance", type=float, default=0.01,
+                    help="allowed relative increase per gated field (default 1%%)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        ap.error(str(e))
+
+    errors, notes = check(current, baseline, args.tolerance)
+    for note in notes:
+        print(f"NOTE  {note}")
+    for err in errors:
+        print(f"FAIL  {err}")
+    checked = len(set(baseline) & set(current))
+    if errors:
+        print(f"bench-gate: {len(errors)} regression(s) across "
+              f"{checked} gated plans")
+        return 1
+    print(f"bench-gate: OK ({checked} plans within "
+          f"{args.tolerance * 100:.1f}% of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,9 +16,9 @@ from __future__ import annotations
 import time
 from typing import Callable
 
-from repro.core.analytic import EngineTimes, Hardware, TPU_V5E, RTX3080_PAPER, times_from_plan
+from repro.core.analytic import EngineTimes, Hardware, TPU_V5E, times_from_plan
 from repro.core.oocore import compile_plan
-from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil  # noqa: F401 (PAPER_BENCHMARKS re-exported to fig modules)
 
 OOC_SZ = 38400       # out-of-core domain (11.0 GB with 2 arrays)
 INC_SZ = 12800       # in-core domain (1.2 GB)
@@ -41,18 +41,20 @@ PAPER_SPEEDUP_VS_RESREU = {
 
 
 def paper_plan(engine: str, name: str, sz: int, d: int, s_tb: int,
-               k_on: int = K_ON, n: int = N_STEPS):
+               k_on: int = K_ON, n: int = N_STEPS, codec=None):
     """Compile one engine's op schedule for a paper workload.
 
     The single place encoding the benchmark conventions: the domain is
     framed (``sz + 2r`` per side), ResReu is pinned to single-step
     kernels (its defining constraint), and InCore streams the whole
-    domain as one chunk."""
+    domain as one chunk.  ``codec`` wraps every transfer in
+    Compress/Decompress ops (None = uncompressed)."""
     st = get_stencil(name)
     Y = X = sz + 2 * st.radius
     k_on_eff = 1 if engine == "resreu" else k_on
     d_eff = 1 if engine == "incore" else d
-    return compile_plan(engine, st, Y, X, n, d_eff, s_tb, k_on_eff)
+    return compile_plan(engine, st, Y, X, n, d_eff, s_tb, k_on_eff,
+                        codec=codec)
 
 
 def modeled(engine: str, name: str, sz: int, d: int, s_tb: int,

@@ -4,7 +4,7 @@
 from repro.core.params import CodeSpec, feasible
 from repro.core.analytic import TPU_V5E
 
-from .common import K_ON, N_STEPS, OOC_SZ, PAPER_BENCHMARKS, emit, modeled
+from .common import N_STEPS, OOC_SZ, PAPER_BENCHMARKS, emit, modeled
 
 
 def run():

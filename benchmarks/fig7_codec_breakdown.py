@@ -1,0 +1,40 @@
+"""Fig. 7-style raw-vs-wire transfer breakdown per codec.
+
+For each paper stencil and out-of-core engine, compile the schedule
+once, rewrite it per transfer codec (identity / bf16 / zrle), and read
+the raw and wire H2D/D2H byte totals plus the modeled TPU-v5e phase
+times off the plan.  Shows where on-the-fly compression
+(arXiv 2204.11315) actually buys wall-clock: only transfer-bound
+configs move, because the model charges the interconnect at wire bytes
+while kernels are untouched.
+"""
+from repro.core.analytic import TPU_V5E, times_from_plan
+from repro.core.compress import CODECS, compress_plan
+
+from .common import N_STEPS, OOC_SZ, PAPER_BENCHMARKS, PAPER_CONFIG, emit, paper_plan
+
+
+def run():
+    rows = []
+    for name in PAPER_BENCHMARKS:
+        d, s_tb = PAPER_CONFIG[name]
+        for engine in ("so2dr", "resreu", "naive_tb"):
+            base = paper_plan(engine, name, OOC_SZ, d, s_tb)
+            for codec in sorted(CODECS):
+                plan = compress_plan(base, codec)
+                s = plan.stats()
+                t = times_from_plan(plan, TPU_V5E)
+                rows.append((
+                    f"fig7_codec/{name}/{engine}/{codec}",
+                    t.total_overlapped() * 1e6 / N_STEPS,
+                    f"modeled_tpu raw_gb={s.transfer_bytes / 1e9:.2f} "
+                    f"wire_gb={s.wire_bytes / 1e9:.2f} "
+                    f"ratio={s.compression_ratio:.3f} "
+                    f"h2d={t.h2d:.3f} d2h={t.d2h:.3f} "
+                    f"kernel={t.kernel:.3f} codec_ops={s.codec_ops}",
+                ))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

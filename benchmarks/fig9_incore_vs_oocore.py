@@ -6,7 +6,7 @@ The paper's surprise result — SO2DR ~matching or beating the in-core code
 treats kernels as serialized, so SO2DR == in-core is the modeled
 expectation (ratio 1.0) and ResReu shows the single-step-kernel penalty.
 """
-from .common import INC_SZ, K_ON, N_STEPS, PAPER_BENCHMARKS, emit, modeled
+from .common import INC_SZ, N_STEPS, PAPER_BENCHMARKS, emit, modeled
 
 
 def run():
@@ -22,7 +22,7 @@ def run():
                 f"fig9/{name}/{engine}",
                 t.total_overlapped() * 1e6 / N_STEPS,
                 f"modeled_tpu vs_incore={ratio:.2f} "
-                f"(paper reports so2dr ~0.88-1.0x of incore)",
+                "(paper reports so2dr ~0.88-1.0x of incore)",
             ))
     return rows
 

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --dry-run
+    PYTHONPATH=src python -m benchmarks.run --dry-run --codec all --json BENCH_plan.json
 
 Prints ``name,us_per_call,derived`` CSV.  Rows labeled ``measured_cpu``
 are wall-clock on this container; ``modeled`` rows evaluate the paper's
@@ -12,54 +13,114 @@ roofline rows read the multi-pod dry-run artifacts if present.
 ``--dry-run`` compiles the transfer/kernel op schedule for every engine x
 paper stencil at the full out-of-core size and walks it with the dry-run
 executor — plan construction and plan-derived accounting are exercised
-end-to-end with zero device work (the CI smoke job).
+end-to-end with zero device work (the CI smoke job).  ``--codec`` sweeps
+transfer codecs (``all`` = every registered codec) and reports raw vs
+wire bytes; ``--json`` writes the dry-run rows as a machine-readable
+``BENCH_plan.json`` for the CI bench-gate
+(``benchmarks/check_regression.py`` diffs it against the committed
+``benchmarks/baselines.json``).
+
+Unknown ``--engine``/``--codec`` names are a hard error (exit code 2),
+not a silent skip.
 """
 import argparse
+import json
 import sys
 
 
-def dry_run() -> None:
+def _resolve_names(requested, known, kind, parser):
+    """Expand 'all' and validate names against a registry; exit 2 on
+    unknown names instead of silently skipping them."""
+    if requested in (None, "all"):
+        return sorted(known)
+    names = [s for s in requested.split(",") if s]
+    for name in names:
+        if name not in known:
+            parser.error(
+                f"unknown {kind} {name!r}; known: {sorted(known)} (or 'all')")
+    return names
+
+
+def dry_run(engines, codecs, json_path=None) -> None:
+    from repro.core.compress import compress_plan
     from repro.core.executor import DryRunExecutor
-    from repro.core.oocore import ENGINES
     from repro.core.stencil import PAPER_BENCHMARKS
 
     from .common import OOC_SZ, PAPER_CONFIG, paper_plan
 
     print("name,plan_ops,derived")
     ex = DryRunExecutor()
+    records = {}
     for name in PAPER_BENCHMARKS:
         d, s_tb = PAPER_CONFIG[name]
-        for engine in sorted(ENGINES):
-            plan = paper_plan(engine, name, OOC_SZ, d, s_tb)
-            _, s = ex.execute(plan)
-            print(f"dryrun/{name}/{engine},{len(plan)},"
-                  f"h2d_gb={s.h2d_bytes / 1e9:.2f} "
-                  f"d2h_gb={s.d2h_bytes / 1e9:.2f} "
-                  f"odc_gb={s.buffer_bytes / 1e9:.2f} "
-                  f"kernels={s.kernel_calls} "
-                  f"redundancy={s.redundancy:.4f}")
+        for engine in engines:
+            base = paper_plan(engine, name, OOC_SZ, d, s_tb)
+            for codec in codecs:
+                plan = compress_plan(base, codec)
+                _, s = ex.execute(plan)
+                key = f"{name}/{engine}/{codec}"
+                print(f"dryrun/{key},{len(plan)},"
+                      f"h2d_gb={s.h2d_bytes / 1e9:.2f} "
+                      f"d2h_gb={s.d2h_bytes / 1e9:.2f} "
+                      f"wire_gb={s.wire_bytes / 1e9:.2f} "
+                      f"ratio={s.compression_ratio:.3f} "
+                      f"odc_gb={s.buffer_bytes / 1e9:.2f} "
+                      f"kernels={s.kernel_calls} "
+                      f"redundancy={s.redundancy:.4f}")
+                records[key] = {
+                    "plan_ops": len(plan),
+                    "raw_bytes": s.transfer_bytes,
+                    "wire_bytes": s.wire_bytes,
+                    "h2d_wire_bytes": s.h2d_wire_bytes,
+                    "d2h_wire_bytes": s.d2h_wire_bytes,
+                    "buffer_bytes": s.buffer_bytes,
+                    "kernel_calls": s.kernel_calls,
+                }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {len(records)} plan records to {json_path}",
+              file=sys.stderr)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true",
                     help="compile + cost every engine's plan, no device work")
+    ap.add_argument("--engine", default="all",
+                    help="comma-separated engine names, or 'all' (default)")
+    ap.add_argument("--codec", default="identity",
+                    help="comma-separated transfer codecs, or 'all' "
+                         "(default: identity — uncompressed wire bytes)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write dry-run plan records as JSON (bench-gate)")
     args = ap.parse_args(argv)
+
+    from repro.core.compress import CODECS
+    from repro.core.oocore import ENGINES
+
+    engines = _resolve_names(args.engine, ENGINES, "engine", ap)
+    codecs = _resolve_names(args.codec, CODECS, "codec", ap)
+
     if args.dry_run:
-        dry_run()
+        dry_run(engines, codecs, json_path=args.json)
         return
+    if args.json or args.engine != "all" or args.codec != "identity":
+        ap.error("--engine/--codec/--json only apply to --dry-run; the "
+                 "measured path always runs the full figure suite")
 
     from . import (
         autotune_bench, fig5_config_sweep, fig6_so2dr_vs_resreu,
-        fig7_breakdown, fig8_single_step, fig9_incore_vs_oocore,
-        kernel_micro, roofline,
+        fig7_breakdown, fig7_codec_breakdown, fig8_single_step,
+        fig9_incore_vs_oocore, kernel_micro, roofline,
     )
     from .common import emit
 
     print("name,us_per_call,derived")
-    for mod in (fig6_so2dr_vs_resreu, fig7_breakdown, fig5_config_sweep,
-                fig8_single_step, fig9_incore_vs_oocore, autotune_bench,
-                kernel_micro):
+    for mod in (fig6_so2dr_vs_resreu, fig7_breakdown, fig7_codec_breakdown,
+                fig5_config_sweep, fig8_single_step, fig9_incore_vs_oocore,
+                autotune_bench, kernel_micro):
         try:
             emit(mod.run())
         except Exception as e:  # keep the harness robust

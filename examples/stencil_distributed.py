@@ -9,7 +9,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.compat import AxisType, make_mesh

@@ -10,7 +10,6 @@ uses the identical code path (swap of ArchConfig only) — on a TPU slice
 the launch layer shards it with launch/sharding.py.
 """
 import argparse
-import dataclasses
 
 import jax
 

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES"]
 
@@ -91,7 +91,6 @@ class ArchConfig:
             n += n_dense * ffn_dense
             n += n_moe * (self.n_experts * ffn_dense + d * self.n_experts)
         elif self.family == "vlm":
-            n_cross = self.n_layers // self.cross_attn_every
             n += self.n_layers * (attn + ffn_dense)
             # cross layers replace self-attn with cross-attn (same shape)
         elif self.family == "encdec":

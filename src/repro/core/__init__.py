@@ -7,8 +7,9 @@ Sec. III/IV-C models (analytic/params), plan-derived stats (accounting),
 and the L2 distributed engine (distributed).
 """
 from .analytic import EngineTimes, Hardware, RTX3080_PAPER, TPU_V5E, model_times, times_from_plan  # noqa: F401
+from .compress import CODECS, Codec, compress_plan, get_codec, register_codec  # noqa: F401
 from .executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor, get_executor  # noqa: F401
 from .oocore import InCore, NaiveTB, ResReu, SO2DR, TransferStats, compile_plan, get_engine  # noqa: F401
-from .plan import BufferRead, BufferWrite, D2H, ExecutionPlan, FusedKernel, H2D, HostCommit  # noqa: F401
+from .plan import BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan, FusedKernel, H2D, HostCommit  # noqa: F401
 from .reference import multi_step_band, run_reference, step_band, step_domain  # noqa: F401
 from .stencil import PAPER_BENCHMARKS, REGISTRY, Stencil, get_stencil  # noqa: F401

@@ -20,8 +20,9 @@ __all__ = ["predict_stats"]
 
 def predict_stats(
     engine: str, st: Stencil, Y: int, X: int, n: int,
-    d: int, k_off: int, k_on: int, itemsize: int = 4,
+    d: int, k_off: int, k_on: int, itemsize: int = 4, codec=None,
 ) -> TransferStats:
-    plan = compile_plan(engine, st, Y, X, n, d, k_off, k_on, itemsize)
+    plan = compile_plan(engine, st, Y, X, n, d, k_off, k_on, itemsize,
+                        codec=codec)
     _, stats = DryRunExecutor().execute(plan)
     return stats

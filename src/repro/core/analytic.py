@@ -91,12 +91,19 @@ def model_times(stats, hw: Hardware) -> EngineTimes:
     free), so ``kernel_mem = hbm_bytes / bw_dmem``; compute is
     ``flops / peak_vpu``.  The two overlap on real hardware:
     ``kernel = max(mem, compute)`` per the roofline.
+
+    Transfer phases are charged at *wire* bytes — what actually crosses
+    the interconnect after a codec (arXiv 2204.11315) — which equal the
+    raw bytes on uncompressed plans.  Hand-built stats that never set the
+    wire fields fall back to raw bytes.
     """
+    h2d_wire = getattr(stats, "h2d_wire_bytes", 0) or stats.h2d_bytes
+    d2h_wire = getattr(stats, "d2h_wire_bytes", 0) or stats.d2h_bytes
     k_mem = stats.kernel_hbm_bytes / hw.bw_dmem
     k_cmp = stats.flops / hw.peak_vpu_flops
     return EngineTimes(
-        h2d=stats.h2d_bytes / hw.bw_intc,
-        d2h=stats.d2h_bytes / hw.bw_intc,
+        h2d=h2d_wire / hw.bw_intc,
+        d2h=d2h_wire / hw.bw_intc,
         odc=stats.buffer_bytes / hw.bw_dmem,
         kernel=max(k_mem, k_cmp),
         kernel_mem=k_mem,

@@ -25,6 +25,7 @@ import dataclasses
 from typing import Iterable, List, Optional
 
 from .analytic import EngineTimes, Hardware, model_times
+from .compress import compress_plan
 from .executor import DryRunExecutor
 from .oocore import compile_plan
 from .params import CodeSpec, feasible
@@ -39,13 +40,15 @@ class Choice:
     d: int
     s_tb: int
     k_on: int
+    codec: str               # transfer codec ("identity" = uncompressed)
     time_s: float
     bottleneck: str          # "transfer" | "kernel"
     times: EngineTimes
 
     @property
     def config(self):
-        return dict(engine=self.engine, d=self.d, s_tb=self.s_tb, k_on=self.k_on)
+        return dict(engine=self.engine, d=self.d, s_tb=self.s_tb,
+                    k_on=self.k_on, codec=self.codec)
 
 
 def _bottleneck(t: EngineTimes, n_streams: int) -> str:
@@ -61,9 +64,22 @@ def autotune(
     d_grid: Iterable[int] = (4, 8, 16),
     s_tb_grid: Iterable[int] = (20, 40, 80, 160, 320, 640),
     k_on_grid: Iterable[int] = (1, 2, 4, 8),
+    codecs: Iterable[str] = ("identity", "zrle"),
     b_elem: int = 4,
 ) -> List[Choice]:
-    """Rank all feasible configs by modeled overlapped time (best first)."""
+    """Rank all feasible configs by modeled overlapped time (best first).
+
+    Codec choice sweeps alongside ``(d, S_TB, k_on)``: the base plan is
+    compiled once per geometry and rewritten per codec (the rewrite is a
+    cheap op-stream pass), then costed by the same dry-run executor —
+    wire bytes drive the transfer terms, so a codec only wins when the
+    config is transfer-bound.
+
+    The default grid is lossless-only: the model charges no accuracy
+    cost, so a lossy codec like ``bf16`` would weakly dominate whenever
+    any transfer time exists and the tuner would silently recommend
+    re-quantizing numerics.  Callers who accept the bf16 error bound opt
+    in with ``codecs=("identity", "zrle", "bf16")``."""
     code = CodeSpec(sz=sz, radius=st.radius, b_elem=b_elem,
                     total_steps=n_steps, n_arrays=2)
     Y = X = sz + 2 * st.radius
@@ -76,18 +92,24 @@ def autotune(
                 k_ons = (1,) if engine == "resreu" else k_on_grid
                 for k_on in k_ons:
                     try:
-                        plan = compile_plan(engine, st, Y, X, n_steps,
+                        base = compile_plan(engine, st, Y, X, n_steps,
                                             d, s_tb, k_on, b_elem)
                     except ValueError:
                         continue
-                    _, stats = DryRunExecutor().execute(plan)
-                    t = model_times(stats, hw)
-                    out.append(Choice(
-                        engine=engine, d=d, s_tb=s_tb, k_on=k_on,
-                        time_s=t.total_overlapped(hw.n_streams),
-                        bottleneck=_bottleneck(t, hw.n_streams),
-                        times=t,
-                    ))
+                    for codec in codecs:
+                        try:
+                            plan = compress_plan(base, codec)
+                        except ValueError:
+                            continue   # codec can't handle this itemsize
+                        _, stats = DryRunExecutor().execute(plan)
+                        t = model_times(stats, hw)
+                        out.append(Choice(
+                            engine=engine, d=d, s_tb=s_tb, k_on=k_on,
+                            codec=codec,
+                            time_s=t.total_overlapped(hw.n_streams),
+                            bottleneck=_bottleneck(t, hw.n_streams),
+                            times=t,
+                        ))
     out.sort(key=lambda c: c.time_s)
     return out
 
@@ -95,6 +117,11 @@ def autotune(
 def optimization_target(st: Stencil, sz: int, n_steps: int,
                         hw: Hardware) -> Optional[str]:
     """The paper's Fig. 3a decision, automated: what should be optimized
-    next for the *best* config — 'kernel' or 'transfer'?"""
-    ranked = autotune(st, sz, n_steps, hw)
+    next for the *best* config — 'kernel' or 'transfer'?
+
+    Evaluated on uncompressed plans (the paper's setting): a transfer
+    codec would shrink the wire term and skew the very comparison this
+    reproduces.  Sweep ``autotune(..., codecs=...)`` directly to ask the
+    codec-aware question."""
+    ranked = autotune(st, sz, n_steps, hw, codecs=("identity",))
     return ranked[0].bottleneck if ranked else None

@@ -26,9 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compress import get_codec
 from .plan import (
-    BufferRead, BufferWrite, D2H, ExecutionPlan, FusedKernel, H2D,
-    HostCommit, TransferStats,
+    BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
+    FusedKernel, H2D, HostCommit, TransferStats,
 )
 from .reference import multi_step_band
 
@@ -42,23 +43,85 @@ __all__ = [
 FusedStep = Callable[..., jnp.ndarray]
 
 
+class _StagedWrite:
+    """One staged D2H.
+
+    ``rows`` stays an async device handle until the HostCommit barrier —
+    also for compressed transfers: the codec's encode/decode round trip
+    runs at commit time (the first point the bytes are forced anyway), so
+    compression never adds a per-chunk sync and the double-buffered
+    overlap is preserved.  ``pending`` is True only between a d2h-side
+    Compress and its Decompress; committing a pending entry is a plan
+    bug."""
+
+    __slots__ = ("host_lo", "host_hi", "rows", "codec", "pending")
+
+    def __init__(self, host_lo, host_hi, rows, codec=None, pending=False):
+        self.host_lo, self.host_hi = host_lo, host_hi
+        self.rows = rows          # async jnp handle (or np rows)
+        self.codec = codec        # codec name; round trip runs at commit
+        self.pending = pending
+
+
 class _DeviceState:
-    """Register/buffer/staging state shared by the device executors."""
+    """Register/buffer/staging state shared by the device executors.
+
+    Codec ops run for real: the ``Compress``/``Decompress`` pairs the
+    rewrite pass emits encode the transferred rows into an actual byte
+    payload and decode them on the far side (this container is CPU, so
+    the codec's device half runs in NumPy).  H2D encodes eagerly at the
+    Compress op (a pure host-side read; the ``jnp.asarray`` hop carries
+    the encoded bytes) and decodes at the Decompress op; the D2H round
+    trip is recorded at the Decompress op but physically runs at the
+    HostCommit barrier — the first point the device bytes are forced
+    anyway — so compression never introduces a per-chunk sync.  Lossless
+    codecs therefore round-trip bit-exactly through real encoded bytes;
+    accounting still comes from the plan."""
 
     def __init__(self, host: np.ndarray, fused_step: FusedStep):
         self.host = host
         self.fused_step = fused_step
         self.regs: Dict[str, jnp.ndarray] = {}
         self.bufs: Dict[str, jnp.ndarray] = {}
-        # staged D2H handles: (host_lo, host_hi, device rows)
-        self.staged: List[Tuple[int, int, jnp.ndarray]] = []
+        self.staged: List[_StagedWrite] = []
+        # reg -> (device payload, shape, dtype) between Compress(h2d) and
+        # Decompress(h2d); reg -> codec name between Compress(d2h) and D2H
+        self.h2d_wire: Dict[str, Tuple[jnp.ndarray, tuple, np.dtype]] = {}
+        self.d2h_codec: Dict[str, str] = {}
 
     def issue_h2d(self, op: H2D) -> None:
+        if op.reg in self.h2d_wire:
+            return   # wire hop already happened at Compress time
         self.regs[op.reg] = jnp.asarray(self.host[op.host_lo:op.host_hi])
+
+    def _compress(self, op: Compress) -> None:
+        if op.direction == "h2d":
+            rows = self.host[op.host_lo:op.host_hi]
+            payload = get_codec(op.codec).encode(rows)
+            # the wire hop: encoded bytes (not raw rows) go to the device
+            self.h2d_wire[op.reg] = (jnp.asarray(payload), rows.shape, rows.dtype)
+        else:
+            self.d2h_codec[op.reg] = op.codec   # encode happens at the D2H
+
+    def _decompress(self, op: Decompress) -> None:
+        if op.direction == "h2d":
+            payload, shape, dtype = self.h2d_wire.pop(op.reg)
+            decoded = get_codec(op.codec).decode(np.asarray(payload), shape, dtype)
+            self.regs[op.reg] = jnp.asarray(decoded)
+        else:
+            entry = self.staged[-1]
+            assert entry.pending and \
+                (entry.host_lo, entry.host_hi) == (op.host_lo, op.host_hi), \
+                "Decompress does not match the staged D2H"
+            entry.pending = False   # round trip scheduled; runs at commit
 
     def issue(self, op) -> None:
         if isinstance(op, H2D):
             self.issue_h2d(op)
+        elif isinstance(op, Compress):
+            self._compress(op)
+        elif isinstance(op, Decompress):
+            self._decompress(op)
         elif isinstance(op, BufferWrite):
             self.bufs[op.buf] = self.regs[op.reg][op.reg_lo:op.reg_hi]
         elif isinstance(op, BufferRead):
@@ -71,18 +134,27 @@ class _DeviceState:
                 keep_top=op.keep_top, keep_bottom=op.keep_bottom)
         elif isinstance(op, D2H):
             band = self.regs.pop(op.reg)   # last use of the register
-            self.staged.append((op.host_lo, op.host_hi,
-                                band[op.reg_lo:op.reg_hi]))
+            codec = self.d2h_codec.pop(op.reg, None)
+            self.staged.append(_StagedWrite(
+                op.host_lo, op.host_hi, rows=band[op.reg_lo:op.reg_hi],
+                codec=codec, pending=codec is not None))
         elif isinstance(op, HostCommit):
             self.commit()
         else:  # pragma: no cover - planner/executor version skew
             raise TypeError(f"unknown op {op!r}")
 
     def commit(self) -> None:
-        for _, _, dev in self.staged:
-            jax.block_until_ready(dev)
-        for host_lo, host_hi, dev in self.staged:
-            self.host[host_lo:host_hi] = np.asarray(dev)
+        for entry in self.staged:
+            assert not entry.pending, \
+                "staged D2H committed before its Decompress"
+            jax.block_until_ready(entry.rows)
+        for entry in self.staged:
+            rows = np.asarray(entry.rows)
+            if entry.codec is not None:
+                # the wire round trip: device-side encode, host-side decode
+                codec = get_codec(entry.codec)
+                rows = codec.decode(codec.encode(rows), rows.shape, rows.dtype)
+            self.host[entry.host_lo:entry.host_hi] = rows
         self.staged.clear()
 
 
@@ -141,15 +213,17 @@ class DoubleBufferedExecutor:
                 for op in ops:
                     state.issue(op)
                 continue
-            # prefetch the next chunk's H2D before touching this chunk's
-            # kernels; stop at barriers (host rows change there)
+            # prefetch the next chunk's H2D — and the host-side Compress
+            # feeding it — before touching this chunk's kernels; stop at
+            # barriers (host rows change there)
             if j + 1 < len(stages) and stages[j + 1][0] is not None:
                 for nxt in stages[j + 1][1]:
-                    if isinstance(nxt, H2D):
-                        state.issue_h2d(nxt)
+                    if isinstance(nxt, H2D) or (
+                            isinstance(nxt, Compress) and nxt.direction == "h2d"):
+                        state.issue(nxt)
                         prefetched.add(id(nxt))
             for op in ops:
-                if isinstance(op, H2D) and id(op) in prefetched:
+                if id(op) in prefetched:
                     continue
                 state.issue(op)
         state.commit()

@@ -47,11 +47,16 @@ __all__ = [
 class _EngineBase:
     name: str = "base"
 
-    def __init__(self, d: int, k_off: int, k_on: int, fused_step: Optional[FusedStep] = None):
+    def __init__(self, d: int, k_off: int, k_on: int,
+                 fused_step: Optional[FusedStep] = None, codec=None):
         self.d = d
         self.k_off = k_off
         self.k_on = k_on
         self.fused_step = fused_step
+        # transfer codec (name or repro.core.compress.Codec); None keeps
+        # the schedule uncompressed.  Applied by the builder at build()
+        # time, so planner subclasses stay codec-oblivious.
+        self.codec = codec
 
     def _chunks(self, Y: int, X: int, st: Stencil) -> ChunkPlan:
         plan = make_chunk_plan(Y, X, st.radius, self.d)
@@ -63,8 +68,11 @@ class _EngineBase:
         return plan
 
     def _builder(self, Y: int, X: int, st: Stencil, n: int, itemsize: int) -> PlanBuilder:
-        return PlanBuilder(self.name, st, Y, X, n, self.d, self.k_off,
-                           self.k_on, itemsize)
+        b = PlanBuilder(self.name, st, Y, X, n, self.d, self.k_off,
+                        self.k_on, itemsize)
+        if self.codec is not None:
+            b.with_compression(self.codec)
+        return b
 
     def compile(self, Y: int, X: int, st: Stencil, n: int,
                 itemsize: int = 4) -> ExecutionPlan:
@@ -211,17 +219,21 @@ class SO2DR(_EngineBase):
 ENGINES = {e.name: e for e in (InCore, NaiveTB, ResReu, SO2DR)}
 
 
-def get_engine(name: str, d: int, k_off: int, k_on: int, fused_step=None) -> _EngineBase:
+def get_engine(name: str, d: int, k_off: int, k_on: int, fused_step=None,
+               codec=None) -> _EngineBase:
     try:
         cls = ENGINES[name]
     except KeyError:
         raise KeyError(f"unknown engine {name!r}; known: {sorted(ENGINES)}")
-    return cls(d=d, k_off=k_off, k_on=k_on, fused_step=fused_step)
+    return cls(d=d, k_off=k_off, k_on=k_on, fused_step=fused_step, codec=codec)
 
 
 def compile_plan(engine: str, st: Stencil, Y: int, X: int, n: int,
-                 d: int, k_off: int, k_on: int, itemsize: int = 4) -> ExecutionPlan:
+                 d: int, k_off: int, k_on: int, itemsize: int = 4,
+                 codec=None) -> ExecutionPlan:
     """Compile one engine configuration into its op schedule — the
-    geometry-only entry point used by accounting and the autotuner."""
-    return get_engine(engine, d=d, k_off=k_off, k_on=k_on).compile(
+    geometry-only entry point used by accounting and the autotuner.
+    ``codec`` (a name from :data:`repro.core.compress.CODECS` or a codec
+    instance) wraps every transfer in Compress/Decompress ops."""
+    return get_engine(engine, d=d, k_off=k_off, k_on=k_on, codec=codec).compile(
         Y, X, st, n, itemsize=itemsize)

@@ -18,7 +18,15 @@ BufferRead     ``reg = concat(buffer[buf], reg[src])``        O/D copy
 FusedKernel    ``reg = fused_step(reg, steps, keeps)``        Kernel
 D2H            stage ``reg[reg_lo:reg_hi] -> host rows``      DtoH
 HostCommit     flush staged D2H rows into the host array      (barrier)
+Compress       encode the wrapped transfer's payload          HtoD/DtoH
+Decompress     decode it on the other side of the wire        HtoD/DtoH
 =============  =============================================  ===========
+
+``Compress``/``Decompress`` are transfer *transformations*
+(arXiv 2204.11315): the rewrite pass in :mod:`repro.core.compress` wraps
+every ``H2D``/``D2H`` in an encode/decode pair carrying the codec id,
+the raw byte count, and the modeled wire byte count, so the dry-run
+executor costs compressed schedules exactly like uncompressed ones.
 
 Each op carries its exact byte count and ``(round, chunk)`` provenance, so
 :meth:`ExecutionPlan.stats` derives the full :class:`TransferStats` —
@@ -41,16 +49,27 @@ from typing import Dict, Iterator, List, Optional, Tuple, Union
 __all__ = [
     "TransferStats",
     "H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel", "HostCommit",
+    "Compress", "Decompress",
     "Op", "ExecutionPlan", "PlanBuilder",
 ]
 
 
 @dataclasses.dataclass
 class TransferStats:
-    """Byte/FLOP accounting for one engine run (paper Fig. 7 categories)."""
+    """Byte/FLOP accounting for one engine run (paper Fig. 7 categories).
+
+    ``*_bytes`` are the *raw* (uncompressed) transfer payloads — the row
+    geometry the planner scheduled.  ``*_wire_bytes`` are what actually
+    crosses the interconnect: equal to raw on uncompressed plans, and the
+    codec-encoded sizes on plans rewritten by
+    :func:`repro.core.compress.compress_plan` (arXiv 2204.11315-style
+    on-the-fly transfer compression)."""
 
     h2d_bytes: int = 0
     d2h_bytes: int = 0
+    h2d_wire_bytes: int = 0     # interconnect bytes after codec encoding
+    d2h_wire_bytes: int = 0
+    codec_ops: int = 0          # Compress + Decompress op count
     buffer_bytes: int = 0       # on-device region-sharing copies ("O/D")
     kernel_calls: int = 0
     kernel_hbm_bytes: int = 0   # per-call band read + output write traffic
@@ -65,6 +84,22 @@ class TransferStats:
     @property
     def redundancy(self) -> float:
         return self.redundant_elements / max(self.exact_elements, 1)
+
+    @property
+    def transfer_bytes(self) -> int:
+        """Raw H2D + D2H payload (codec-independent row geometry)."""
+        return self.h2d_bytes + self.d2h_bytes
+
+    @property
+    def wire_bytes(self) -> int:
+        """H2D + D2H bytes that actually cross the interconnect."""
+        return self.h2d_wire_bytes + self.d2h_wire_bytes
+
+    @property
+    def compression_ratio(self) -> float:
+        """wire / raw — 1.0 for uncompressed plans, < 1.0 when a codec
+        shrinks the transfers."""
+        return self.wire_bytes / max(self.transfer_bytes, 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +184,48 @@ class FusedKernel:
 
 
 @dataclasses.dataclass(frozen=True)
+class _CodecOp:
+    """Shared shape of the encode/decode halves of a wrapped transfer.
+
+    Both halves carry the same provenance — the codec id, the raw and
+    modeled-wire byte counts, and the wrapped ``H2D``/``D2H``'s register
+    and host-row range — so :func:`repro.core.compress.compress_plan`
+    builds one metadata dict and instantiates the pair from it.
+    ``wire_nbytes`` is the codec's analytic ratio model — deterministic
+    at plan time, so accounting stays a property of the plan."""
+
+    codec: str
+    reg: str
+    direction: str   # "h2d" | "d2h"
+    raw_nbytes: int
+    wire_nbytes: int
+    host_lo: int     # wrapped transfer's host-row provenance
+    host_hi: int
+    round: int
+    chunk: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Compress(_CodecOp):
+    """Encode the payload of the adjacent wrapped transfer.
+
+    Emitted by :func:`repro.core.compress.compress_plan` immediately
+    *before* the ``H2D``/``D2H`` it wraps.  For ``direction == "h2d"``
+    the encode runs host-side (the wire then carries ``wire_nbytes``);
+    for ``"d2h"`` it runs device-side before the staging copy."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Decompress(_CodecOp):
+    """Decode the wrapped transfer's payload on the far side of the wire.
+
+    Emitted immediately *after* the wrapped ``H2D``/``D2H``: device-side
+    for ``"h2d"`` (the register materializes here), host-side for
+    ``"d2h"`` (the staged rows are decoded at the ``HostCommit``
+    barrier)."""
+
+
+@dataclasses.dataclass(frozen=True)
 class HostCommit:
     """Flush all staged D2H writes to the host array.
 
@@ -160,7 +237,8 @@ class HostCommit:
     round: int
 
 
-Op = Union[H2D, D2H, BufferWrite, BufferRead, FusedKernel, HostCommit]
+Op = Union[H2D, D2H, BufferWrite, BufferRead, FusedKernel, HostCommit,
+           Compress, Decompress]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +256,7 @@ class ExecutionPlan:
     k_on: int
     exact_elements: int
     ops: Tuple[Op, ...]
+    codec: str = ""     # "" = uncompressed; else the wrapping codec's name
 
     def __iter__(self) -> Iterator[Op]:
         return iter(self.ops)
@@ -195,8 +274,10 @@ class ExecutionPlan:
         for op in self.ops:
             if isinstance(op, H2D):
                 s.h2d_bytes += op.nbytes
+                s.h2d_wire_bytes += op.nbytes
             elif isinstance(op, D2H):
                 s.d2h_bytes += op.nbytes
+                s.d2h_wire_bytes += op.nbytes
             elif isinstance(op, (BufferWrite, BufferRead)):
                 s.buffer_bytes += op.nbytes
             elif isinstance(op, FusedKernel):
@@ -204,6 +285,16 @@ class ExecutionPlan:
                 s.kernel_hbm_bytes += op.hbm_bytes
                 s.flops += op.flops
                 s.elements_computed += op.elements
+            elif isinstance(op, Compress):
+                # the wrapped transfer contributed raw bytes to the wire
+                # accumulator above; the codec swaps them for wire bytes
+                s.codec_ops += 1
+                if op.direction == "h2d":
+                    s.h2d_wire_bytes += op.wire_nbytes - op.raw_nbytes
+                else:
+                    s.d2h_wire_bytes += op.wire_nbytes - op.raw_nbytes
+            elif isinstance(op, Decompress):
+                s.codec_ops += 1
         return s
 
     def breakdown(self) -> Dict[str, int]:
@@ -213,6 +304,8 @@ class ExecutionPlan:
         return {
             "h2d": s.h2d_bytes,
             "d2h": s.d2h_bytes,
+            "h2d_wire": s.h2d_wire_bytes,
+            "d2h_wire": s.d2h_wire_bytes,
             "odc": s.buffer_bytes,
             "kernel_hbm": s.kernel_hbm_bytes,
         }
@@ -287,6 +380,18 @@ class PlanBuilder:
         self._reg_h: Dict[str, int] = {}      # live register -> rows
         self._buf_h: Dict[str, int] = {}      # unread buffer -> rows
         self._staged_bytes = 0
+        self._codec = None                    # set by with_compression()
+
+    def with_compression(self, codec) -> "PlanBuilder":
+        """Attach a transfer codec (name or :class:`~repro.core.compress.Codec`).
+
+        Chainable; :meth:`build` then rewrites the finished schedule with
+        :func:`repro.core.compress.compress_plan`, wrapping every
+        ``H2D``/``D2H`` in a ``Compress``/``Decompress`` pair.  Planners
+        stay codec-oblivious: the same engine code emits compressed and
+        uncompressed schedules."""
+        self._codec = codec
+        return self
 
     def _row_bytes(self, rows: int) -> int:
         return rows * self.X * self.itemsize
@@ -350,8 +455,12 @@ class PlanBuilder:
         assert self._staged_bytes == 0, "uncommitted D2H rows at end of plan"
         r = self.st.radius
         exact = self.n * (self.Y - 2 * r) * (self.X - 2 * r)
-        return ExecutionPlan(
+        plan = ExecutionPlan(
             engine=self.engine, stencil=self.st.name, Y=self.Y, X=self.X,
             itemsize=self.itemsize, n=self.n, d=self.d, k_off=self.k_off,
             k_on=self.k_on, exact_elements=exact, ops=tuple(self.ops),
         )
+        if self._codec is not None:
+            from .compress import compress_plan   # local: avoids import cycle
+            plan = compress_plan(plan, self._codec)
+        return plan

@@ -10,7 +10,6 @@ from __future__ import annotations
 import dataclasses
 from typing import List
 
-import numpy as np
 
 __all__ = ["ChunkPlan", "make_chunk_plan", "split_steps"]
 

@@ -10,7 +10,7 @@ subprocess.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 

@@ -14,7 +14,7 @@ model families without coupling model code to meshes.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, List, Sequence, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

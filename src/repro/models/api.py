@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -189,11 +189,12 @@ def _build_moe(cfg: ArchConfig) -> Model:
 
     def init_cache(batch, max_len):
         L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
-        kv = lambda n: {
-            "k": jnp.zeros((n, batch, L, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
-            "v": jnp.zeros((n, batch, L, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
-            "len": jnp.zeros((n,), jnp.int32),
-        }
+        def kv(n):
+            return {
+                "k": jnp.zeros((n, batch, L, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+                "v": jnp.zeros((n, batch, L, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+                "len": jnp.zeros((n,), jnp.int32),
+            }
         c: Dict[str, Any] = {"moe": kv(n_super)}
         if cfg.moe_every > 1:
             c["dense"] = jax.tree.map(

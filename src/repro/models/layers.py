@@ -10,8 +10,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Optional
 
@@ -124,9 +122,9 @@ def _attend_block(q, k, v, bias):
     m = jnp.max(s, axis=-1, keepdims=True)
     m = jnp.maximum(m, -1e30)  # rows that are fully masked
     p = jnp.exp(s - m)
-    l = jnp.sum(p, axis=-1, keepdims=True)
+    lse = jnp.sum(p, axis=-1, keepdims=True)
     o = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v)
-    return o, m[..., 0], l[..., 0]
+    return o, m[..., 0], lse[..., 0]
 
 
 def chunked_attention(
@@ -176,7 +174,7 @@ def chunked_attention(
         qpos = qpos_base + qi * q_chunk
 
         def kv_step(carry, inputs):
-            acc, m, l = carry
+            acc, m, lse = carry
             kc, vc, ki = inputs
             kpos = jax.lax.dynamic_slice_in_dim(kpos_all, ki * kv_chunk, kv_chunk)
             valid = (kpos < Sk)[None, :] & (qpos < Sq + q_offset)[:, None]
@@ -190,17 +188,17 @@ def chunked_attention(
             alpha = jnp.exp(m - m_new)
             beta = jnp.exp(mb - m_new)
             acc = acc * alpha[..., None].astype(acc.dtype) + o * beta[..., None].astype(o.dtype)
-            l = l * alpha + lb * beta
-            return (acc, m_new, l), None
+            lse = lse * alpha + lb * beta
+            return (acc, m_new, lse), None
 
         acc0 = jnp.zeros((B, G, rep, q_chunk, Dh), qc.dtype)
         m0 = jnp.full((B, G, rep, q_chunk), -jnp.inf, jnp.float32)
         l0 = jnp.zeros((B, G, rep, q_chunk), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(
+        (acc, m, lse), _ = jax.lax.scan(
             kv_step, (acc0, m0, l0),
             (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), jnp.arange(nk)),
         )
-        return acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return acc / jnp.maximum(lse, 1e-30)[..., None].astype(acc.dtype)
 
     qcs = qp.reshape(B, G, rep, nq, q_chunk, Dh)
     stacked = jnp.moveaxis(qcs, 3, 0)

@@ -11,7 +11,7 @@ Shapes: x (B, S, H, P) heads×head_dim, B/C (B, S, N) state projections
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -178,7 +178,6 @@ def mamba_decode_step(p, cfg: ArchConfig, u: jnp.ndarray, state):
     x = rmsnorm(p["ln"], u)
     z, xBC, dt = _split_proj(cfg, dense(p["in_proj"], x))  # (B,1,*)
     # conv cache: last (w-1) inputs
-    w = cfg.conv_width
     hist = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)], axis=1)  # (B,w,Cdim)
     conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), p["conv_w"])
     xBC1 = jax.nn.silu(conv_out + p["conv_b"]).astype(u.dtype)[:, None]  # (B,1,C)

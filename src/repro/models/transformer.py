@@ -8,7 +8,6 @@ O(layers · layer-boundary), the production choice for 1000+-node meshes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -35,7 +35,9 @@ class AdamW:
     moment_dtype: Any = jnp.float32   # bf16 halves optimizer memory
 
     def init(self, params) -> OptState:
-        z = lambda p: jnp.zeros_like(p, dtype=self.moment_dtype)
+        def z(p):
+            return jnp.zeros_like(p, dtype=self.moment_dtype)
+
         return OptState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(z, params),

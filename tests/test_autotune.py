@@ -53,10 +53,11 @@ def test_selected_config_predicted_stats_match_measured():
     best = ranked[0]
     Y = X = sz + 2 * st.radius
     x = np.random.default_rng(7).standard_normal((Y, X)).astype(np.float32)
-    eng = get_engine(best.engine, d=best.d, k_off=best.s_tb, k_on=best.k_on)
+    eng = get_engine(best.engine, d=best.d, k_off=best.s_tb, k_on=best.k_on,
+                     codec=best.codec)
     _, measured = eng.run(x, st, n)
     predicted = predict_stats(best.engine, st, Y, X, n,
-                              best.d, best.s_tb, best.k_on)
+                              best.d, best.s_tb, best.k_on, codec=best.codec)
     for f in dataclasses.fields(measured):
         assert getattr(measured, f.name) == getattr(predicted, f.name), f.name
 

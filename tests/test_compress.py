@@ -1,0 +1,241 @@
+"""Transfer-codec subsystem: exact round trips, ratio models, and the
+compression rewrite pass over the plan IR.
+
+The property tests (hypothesis; deterministic in-tree stub on minimal
+containers) pin the PR's two invariants: for every engine x codec the
+dry-run TransferStats equal the eager-measured stats field for field,
+and lossless codecs round-trip bit-exactly — both at the array level
+(encode/decode) and end-to-end (compressed plan output identical to the
+uncompressed plan's).
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as hs
+
+from repro.core.compress import CODECS, compress_plan, get_codec
+from repro.core.executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor
+from repro.core.oocore import ENGINES, compile_plan
+from repro.core.plan import Compress, D2H, Decompress, H2D
+from repro.core.reference import run_reference
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+
+RNG = np.random.default_rng(23)
+
+LOSSLESS = sorted(name for name, c in CODECS.items() if c.lossless)
+LOSSY = sorted(name for name, c in CODECS.items() if not c.lossless)
+
+# bit patterns a sloppy codec gets wrong: signed zeros, denormals,
+# infinities, NaN payloads, and exact-zero rows (zrle's favourite food)
+ADVERSARIAL = np.array(
+    [
+        [0.0, -0.0, 1e-45, -1e-45, 1.0, -1.0],
+        [np.inf, -np.inf, np.nan, 3.3e38, -3.3e38, 0.0],
+        [0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        [np.pi, np.e, 2.0**-126, -(2.0**-126), 65504.0, -2.5],
+    ],
+    dtype=np.float32,
+)
+
+
+def _domain(st, rows=48, cols=20, seed=0):
+    Y, X = rows + 2 * st.radius, cols + 2 * st.radius
+    return np.random.default_rng(seed).standard_normal((Y, X)).astype(np.float32)
+
+
+def _compiled(engine, st, x, n, d, k_off, k_on, codec=None):
+    d_eff = 1 if engine == "incore" else d
+    return compile_plan(engine, st, x.shape[0], x.shape[1], n, d_eff,
+                        k_off, k_on, codec=codec)
+
+
+# ---------------------------------------------------------------- codecs
+
+
+def test_registry_rejects_unknown_codec():
+    with pytest.raises(KeyError, match="snappy"):
+        get_codec("snappy")
+
+
+def test_registry_contains_required_codecs():
+    assert {"identity", "bf16", "zrle"} <= set(CODECS)
+
+
+@pytest.mark.parametrize("name", LOSSLESS)
+def test_lossless_roundtrip_is_bit_exact(name):
+    codec = CODECS[name]
+    for arr in (ADVERSARIAL, RNG.standard_normal((17, 9)).astype(np.float32)):
+        out = codec.decode(codec.encode(arr), arr.shape, arr.dtype)
+        np.testing.assert_array_equal(
+            arr.view(np.uint32), out.view(np.uint32), err_msg=name)
+
+
+def test_bf16_error_is_bounded_and_idempotent():
+    codec = CODECS["bf16"]
+    x = RNG.standard_normal((31, 13)).astype(np.float32) * 1e3
+    y = codec.decode(codec.encode(x), x.shape, x.dtype)
+    rel = np.abs(y - x) / np.maximum(np.abs(x), np.finfo(np.float32).tiny)
+    assert rel.max() <= codec.max_rel_error
+    # re-encoding a decoded array must be lossless (repeated halo trips)
+    z = codec.decode(codec.encode(y), y.shape, y.dtype)
+    np.testing.assert_array_equal(y.view(np.uint32), z.view(np.uint32))
+
+
+def test_bf16_preserves_specials():
+    codec = CODECS["bf16"]
+    y = codec.decode(codec.encode(ADVERSARIAL), ADVERSARIAL.shape, np.float32)
+    assert np.isnan(y[1, 2])
+    assert y[1, 0] == np.inf and y[1, 1] == -np.inf
+    assert np.array_equal(np.signbit(y[0, :2]), [False, True])
+
+
+def test_wire_models():
+    raw = 4 * 8 * 1000
+    assert CODECS["identity"].wire_nbytes(raw, 4) == raw
+    assert CODECS["bf16"].wire_nbytes(raw, 4) == raw // 2
+    assert 0 < CODECS["zrle"].wire_nbytes(raw, 4) < raw
+
+
+def test_zrle_compresses_smooth_halo_bands():
+    """The measured payload (not just the model) must shrink on the data
+    zrle is tuned for: bands that are constant or smooth along rows."""
+    codec = CODECS["zrle"]
+    band = np.tile(np.linspace(-1, 1, 64, dtype=np.float32), (32, 1))
+    assert codec.encode(band).nbytes < band.nbytes / 4
+
+
+# ---------------------------------------------------- rewrite pass / IR
+
+
+def test_compress_plan_rejects_already_compressed_plan():
+    """Nesting codecs would double-count wire bytes and break the
+    executor's Compress/Decompress pairing — the rewrite must refuse."""
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    plan = _compiled("so2dr", st, x, 8, 4, 4, 2, codec="bf16")
+    with pytest.raises(ValueError, match="already compressed"):
+        compress_plan(plan, "zrle")
+
+
+def test_compress_plan_rejects_incompatible_itemsize():
+    """A codec the executors could not run must be rejected at rewrite
+    time, so dry-run/autotune never cost an unexecutable schedule."""
+    st = get_stencil("box2d1r")
+    base = compile_plan("so2dr", st, 66, 66, 4, 4, 2, 2, itemsize=8)
+    for codec in ("bf16", "zrle"):
+        with pytest.raises(ValueError, match="itemsize"):
+            compress_plan(base, codec)
+    assert compress_plan(base, "identity").codec == "identity"
+
+
+def test_compress_plan_wraps_every_transfer():
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    base = _compiled("so2dr", st, x, 8, 4, 4, 2)
+    plan = compress_plan(base, "bf16")
+    assert plan.codec == "bf16"
+    ops = list(plan.ops)
+    n_xfer = sum(isinstance(op, (H2D, D2H)) for op in base.ops)
+    assert sum(isinstance(op, Compress) for op in ops) == n_xfer
+    assert sum(isinstance(op, Decompress) for op in ops) == n_xfer
+    for i, op in enumerate(ops):
+        if isinstance(op, (H2D, D2H)):
+            before, after = ops[i - 1], ops[i + 1]
+            assert isinstance(before, Compress) and isinstance(after, Decompress)
+            assert before.raw_nbytes == op.nbytes == after.raw_nbytes
+            assert before.wire_nbytes == op.nbytes // 2
+            assert (before.host_lo, before.host_hi) == (op.host_lo, op.host_hi)
+    s, s0 = plan.stats(), base.stats()
+    assert (s.h2d_bytes, s.d2h_bytes) == (s0.h2d_bytes, s0.d2h_bytes)
+    assert s.wire_bytes * 2 == s.transfer_bytes
+    assert s0.wire_bytes == s0.transfer_bytes  # uncompressed: wire == raw
+
+
+# ------------------------------------------- property: engines x codecs
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    engine=hs.sampled_from(sorted(ENGINES)),
+    codec=hs.sampled_from(sorted(CODECS)),
+    stencil=hs.sampled_from(sorted(PAPER_BENCHMARKS)),
+    n=hs.integers(2, 6),
+    k_off=hs.integers(1, 4),
+    k_on=hs.integers(1, 3),
+    seed=hs.integers(0, 2**16),
+)
+def test_dry_run_stats_equal_eager_stats_for_every_engine_codec(
+        engine, codec, stencil, n, k_off, k_on, seed):
+    """Accounting is a property of the plan: eager execution of a
+    compressed schedule must report exactly the stats the zero-device
+    dry run predicted, and wire bytes must undercut raw bytes for every
+    non-identity codec."""
+    st = get_stencil(stencil)
+    x = _domain(st, seed=seed)
+    try:
+        plan = _compiled(engine, st, x, n, 4, k_off, k_on, codec=codec)
+    except ValueError:
+        return  # infeasible k_off for this geometry: planner rejected it
+    _, dry = DryRunExecutor().execute(plan)
+    _, eager = EagerExecutor().execute(plan, x)
+    for f in dataclasses.fields(eager):
+        assert getattr(dry, f.name) == getattr(eager, f.name), f.name
+    assert dry.codec_ops > 0
+    if codec == "identity":
+        assert dry.wire_bytes == dry.transfer_bytes
+    else:
+        assert dry.wire_bytes < dry.transfer_bytes
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    engine=hs.sampled_from(sorted(ENGINES)),
+    codec=hs.sampled_from(LOSSLESS),
+    seed=hs.integers(0, 2**16),
+)
+def test_lossless_codecs_roundtrip_bit_exactly_through_executors(
+        engine, codec, seed):
+    """A lossless codec must be invisible to the computation: the
+    compressed plan's eager output is bitwise identical to the
+    uncompressed plan's, on both device executors."""
+    st = get_stencil("box2d2r")
+    x = _domain(st, seed=seed)
+    base = _compiled(engine, st, x, 6, 4, 3, 2)
+    plan = compress_plan(base, codec)
+    out0, _ = EagerExecutor().execute(base, x)
+    out1, _ = EagerExecutor().execute(plan, x)
+    out2, _ = DoubleBufferedExecutor().execute(plan, x)
+    np.testing.assert_array_equal(out0.view(np.uint32), out1.view(np.uint32))
+    np.testing.assert_array_equal(out1.view(np.uint32), out2.view(np.uint32))
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_bf16_compressed_execution_has_bounded_error(engine):
+    """Lossy transfers re-quantize each round trip; over all rounds the
+    result must stay within a small multiple of the per-trip bound."""
+    st = get_stencil("box2d1r")
+    x = _domain(st)
+    n = 8
+    plan = _compiled(engine, st, x, n, 4, 4, 2, codec="bf16")
+    ref = np.asarray(run_reference(jnp.asarray(x), st, n))
+    out, stats = EagerExecutor().execute(plan, x)
+    scale = np.abs(ref).max()
+    assert np.abs(out - ref).max() / scale < 0.02
+    assert stats.wire_bytes * 2 == stats.transfer_bytes
+
+
+def test_compressed_double_buffered_prefetch_matches_eager():
+    """Prefetching the next chunk's Compress+H2D under the current
+    chunk's kernels must not change results (bf16 is deterministic, so
+    even the lossy codec must agree bitwise between executors)."""
+    st = get_stencil("box2d3r")
+    x = _domain(st)
+    plan = _compiled("so2dr", st, x, 8, 4, 4, 2, codec="bf16")
+    out_eager, _ = EagerExecutor().execute(plan, x)
+    out_db, _ = DoubleBufferedExecutor().execute(plan, x)
+    np.testing.assert_array_equal(
+        out_eager.view(np.uint32), out_db.view(np.uint32))

@@ -9,7 +9,6 @@ import subprocess
 import sys
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.compat import AxisType, make_mesh

@@ -63,7 +63,6 @@ def test_nested_scan_multiplies():
 
 
 def test_collectives_counted():
-    import numpy as np
     mesh = make_mesh((1,), ("d",), axis_types=(AxisType.Auto,))
 
     def f(x):

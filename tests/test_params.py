@@ -2,7 +2,7 @@
 constraint (hypothesis over hardware/software configs)."""
 from hypothesis import given, settings, strategies as st_h
 
-from repro.core.analytic import Hardware, RTX3080_PAPER, TPU_V5E
+from repro.core.analytic import RTX3080_PAPER, TPU_V5E
 from repro.core.params import CodeSpec, enumerate_candidates, feasible
 
 

@@ -3,7 +3,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.stencil import REGISTRY, PAPER_BENCHMARKS, get_stencil, box_coeffs
+from repro.core.stencil import PAPER_BENCHMARKS, get_stencil, box_coeffs
 from repro.core.reference import run_reference, step_band, multi_step_band
 
 

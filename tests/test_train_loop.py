@@ -3,7 +3,6 @@ gradient compression, optimizer math."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data import DataSpec, SyntheticLM
