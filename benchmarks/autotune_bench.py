@@ -20,7 +20,8 @@ def run():
                 f"autotune/{name}/{tag}",
                 b.time_s * 1e6 / N_STEPS,
                 f"modeled best engine={b.engine} d={b.d} s_tb={b.s_tb} "
-                f"k_on={b.k_on} next_target={b.bottleneck}",
+                f"k_on={b.k_on} impl={b.kernel_impl} "
+                f"next_target={b.bottleneck}",
             ))
     return rows
 

@@ -10,12 +10,20 @@ against the committed ``benchmarks/baselines.json``:
   regressed — an engine/codec stopped compiling);
 * ``wire_bytes`` above baseline by more than ``--tolerance`` (relative)
   is an error (a planner or codec change made transfers fatter);
+* the deterministic op-count/cache metrics (``plan_ops``,
+  ``stage_count``, ``shape_buckets`` — the kernel-compile ceiling of the
+  lowered plan) must match the baseline *exactly*: they are integers
+  derived from the plan and its lowering, so any drift is a real
+  scheduling or bucketing change that deserves a deliberate baseline
+  refresh;
 * new keys are reported but allowed (refresh the baseline to start
   gating them).
 
 Wire bytes are modeled at plan time, so the signal is deterministic:
 any diff is a real scheduling/codec change, never measurement noise.
 The tolerance only absorbs intentional sub-percent accounting tweaks.
+Wall-clock numbers (``BENCH_exec.json``) never gate — they are uploaded
+as a non-gating CI artifact only.
 
 Exit code 0 = gate passes, 1 = regression, 2 = bad invocation.
 """
@@ -28,6 +36,8 @@ from pathlib import Path
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baselines.json"
 
 GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes")
+# integer plan/lowering metrics: exact match, no tolerance
+EXACT_FIELDS = ("plan_ops", "stage_count", "shape_buckets")
 
 
 def check(current: dict, baseline: dict, tolerance: float):
@@ -38,12 +48,19 @@ def check(current: dict, baseline: dict, tolerance: float):
         if cur is None:
             errors.append(f"{key}: present in baseline but missing from run")
             continue
-        for field in GATED_FIELDS:
+        for field in GATED_FIELDS + EXACT_FIELDS:
             if field not in base:
                 continue
             if field not in cur:
                 # schema drift must not silently erode the gate
                 errors.append(f"{key}: gated field {field!r} missing from run")
+                continue
+            if field in EXACT_FIELDS:
+                if cur[field] != base[field]:
+                    errors.append(
+                        f"{key}: {field} changed {base[field]} -> "
+                        f"{cur[field]} (deterministic metric; refresh "
+                        f"baselines.json if intentional)")
                 continue
             allowed = base[field] * (1.0 + tolerance)
             if cur[field] > allowed:

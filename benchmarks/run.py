@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --dry-run
     PYTHONPATH=src python -m benchmarks.run --dry-run --codec all --json BENCH_plan.json
+    PYTHONPATH=src python -m benchmarks.run --exec --executor double_buffered \
+        --fused-step reference --json BENCH_exec.json
 
 Prints ``name,us_per_call,derived`` CSV.  Rows labeled ``measured_cpu``
 are wall-clock on this container; ``modeled`` rows evaluate the paper's
@@ -13,19 +15,35 @@ roofline rows read the multi-pod dry-run artifacts if present.
 ``--dry-run`` compiles the transfer/kernel op schedule for every engine x
 paper stencil at the full out-of-core size and walks it with the dry-run
 executor — plan construction and plan-derived accounting are exercised
-end-to-end with zero device work (the CI smoke job).  ``--codec`` sweeps
-transfer codecs (``all`` = every registered codec) and reports raw vs
-wire bytes; ``--json`` writes the dry-run rows as a machine-readable
-``BENCH_plan.json`` for the CI bench-gate
-(``benchmarks/check_regression.py`` diffs it against the committed
-``benchmarks/baselines.json``).
+end-to-end with zero device work (the CI smoke job).  Each record also
+carries the deterministic lowering metrics (stage count, shape buckets =
+max kernel compiles) from :func:`repro.core.lower.lower`.  ``--codec``
+sweeps transfer codecs (``all`` = every registered codec) and reports raw
+vs wire bytes; ``--json`` writes the records as machine-readable JSON for
+the CI bench-gate (``benchmarks/check_regression.py`` diffs byte and
+op-count/cache metrics against the committed ``benchmarks/baselines.json``).
 
-Unknown ``--engine``/``--codec`` names are a hard error (exit code 2),
-not a silent skip.
+``--exec`` *executes* every engine x paper stencil at a small real size
+through the lowered executors (``--executor``, ``--fused-step`` pick the
+interpreter and the kernel-dispatch implementation) and reports the
+:class:`~repro.core.lower.ExecStats` wall-clock-per-op-class and
+compilation-cache counters.  Timings are machine-dependent and never
+gate CI; the JSON is uploaded as a non-gating artifact.
+
+Unknown ``--engine``/``--codec``/``--executor``/``--fused-step`` names
+are a hard error (exit code 2), not a silent skip.
 """
 import argparse
 import json
 import sys
+
+# --exec workload: small enough to run on a CPU container in seconds,
+# big enough that every engine produces multi-chunk, multi-round plans
+EXEC_SZ = 192
+EXEC_STEPS = 8
+EXEC_D = 4
+EXEC_S_TB = 4
+EXEC_K_ON = 2
 
 
 def _resolve_names(requested, known, kind, parser):
@@ -41,9 +59,17 @@ def _resolve_names(requested, known, kind, parser):
     return names
 
 
+def _write_json(records, json_path) -> None:
+    with open(json_path, "w") as f:
+        json.dump(records, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {len(records)} records to {json_path}", file=sys.stderr)
+
+
 def dry_run(engines, codecs, json_path=None) -> None:
     from repro.core.compress import compress_plan
     from repro.core.executor import DryRunExecutor
+    from repro.core.lower import lower
     from repro.core.stencil import PAPER_BENCHMARKS
 
     from .common import OOC_SZ, PAPER_CONFIG, paper_plan
@@ -58,6 +84,9 @@ def dry_run(engines, codecs, json_path=None) -> None:
             for codec in codecs:
                 plan = compress_plan(base, codec)
                 _, s = ex.execute(plan)
+                # deterministic lowering metrics: stage programs + shape
+                # buckets (= the kernel-compile ceiling), no execution
+                lowering = lower(plan).describe()
                 key = f"{name}/{engine}/{codec}"
                 print(f"dryrun/{key},{len(plan)},"
                       f"h2d_gb={s.h2d_bytes / 1e9:.2f} "
@@ -66,6 +95,7 @@ def dry_run(engines, codecs, json_path=None) -> None:
                       f"ratio={s.compression_ratio:.3f} "
                       f"odc_gb={s.buffer_bytes / 1e9:.2f} "
                       f"kernels={s.kernel_calls} "
+                      f"buckets={lowering['shape_buckets']} "
                       f"redundancy={s.redundancy:.4f}")
                 records[key] = {
                     "plan_ops": len(plan),
@@ -75,40 +105,100 @@ def dry_run(engines, codecs, json_path=None) -> None:
                     "d2h_wire_bytes": s.d2h_wire_bytes,
                     "buffer_bytes": s.buffer_bytes,
                     "kernel_calls": s.kernel_calls,
+                    "stage_count": lowering["stage_count"],
+                    "shape_buckets": lowering["shape_buckets"],
                 }
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(records, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"# wrote {len(records)} plan records to {json_path}",
-              file=sys.stderr)
+        _write_json(records, json_path)
+
+
+def exec_bench(engines, codecs, executor_name, fused_impl,
+               json_path=None) -> None:
+    import numpy as np
+
+    from repro.core.executor import get_executor
+    from repro.core.oocore import compile_plan
+    from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+    from repro.kernels.dispatch import DispatchPolicy
+
+    print("name,wall_ms,derived")
+    records = {}
+    policy = DispatchPolicy(impl=fused_impl)
+    for name in PAPER_BENCHMARKS:
+        st = get_stencil(name)
+        Y = X = EXEC_SZ + 2 * st.radius
+        x = np.random.default_rng(42).standard_normal((Y, X)).astype(np.float32)
+        for engine in engines:
+            d_eff = 1 if engine == "incore" else EXEC_D
+            k_on = 1 if engine == "resreu" else EXEC_K_ON
+            for codec in codecs:
+                plan = compile_plan(engine, st, Y, X, EXEC_STEPS, d_eff,
+                                    EXEC_S_TB, k_on, codec=codec)
+                ex = get_executor(executor_name, policy=policy)
+                _, _ = ex.execute(plan, x)
+                es = ex.exec_stats
+                key = f"{name}/{engine}/{codec}"
+                print(f"exec/{key},{es.wall_s * 1e3:.1f},"
+                      f"impl={es.kernel_impl} "
+                      f"kernels={es.kernel_calls} "
+                      f"compiles={es.kernel_compiles} "
+                      f"hits={es.kernel_cache_hits} "
+                      f"buckets={es.shape_buckets} "
+                      f"stages={es.stage_count}")
+                rec = es.as_dict()
+                rec["executor"] = executor_name
+                records[key] = rec
+    if json_path:
+        _write_json(records, json_path)
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true",
                     help="compile + cost every engine's plan, no device work")
+    ap.add_argument("--exec", dest="exec_bench", action="store_true",
+                    help="execute every engine at a small size; report "
+                         "ExecStats wall clock + cache counters (non-gating)")
     ap.add_argument("--engine", default="all",
                     help="comma-separated engine names, or 'all' (default)")
     ap.add_argument("--codec", default="identity",
                     help="comma-separated transfer codecs, or 'all' "
                          "(default: identity — uncompressed wire bytes)")
+    ap.add_argument("--executor", default="eager",
+                    help="executor for --exec (eager | double_buffered)")
+    ap.add_argument("--fused-step", default="auto",
+                    help="kernel-dispatch impl for --exec "
+                         "(auto | reference | pallas | pallas_db | mxu)")
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="write dry-run plan records as JSON (bench-gate)")
+                    help="write dry-run/exec records as JSON")
     args = ap.parse_args(argv)
 
     from repro.core.compress import CODECS
+    from repro.core.executor import EXECUTORS
     from repro.core.oocore import ENGINES
+    from repro.kernels.dispatch import KERNEL_IMPLS
 
     engines = _resolve_names(args.engine, ENGINES, "engine", ap)
     codecs = _resolve_names(args.codec, CODECS, "codec", ap)
 
+    if args.dry_run and args.exec_bench:
+        ap.error("--dry-run and --exec are mutually exclusive")
     if args.dry_run:
         dry_run(engines, codecs, json_path=args.json)
         return
+    if args.exec_bench:
+        if args.executor not in EXECUTORS or args.executor == "dry_run":
+            ap.error(f"unknown --executor {args.executor!r}; known: "
+                     f"{sorted(set(EXECUTORS) - {'dry_run'})}")
+        if args.fused_step != "auto" and args.fused_step not in KERNEL_IMPLS:
+            ap.error(f"unknown --fused-step {args.fused_step!r}; known: "
+                     f"{sorted(KERNEL_IMPLS)} (or 'auto')")
+        exec_bench(engines, codecs, args.executor, args.fused_step,
+                   json_path=args.json)
+        return
     if args.json or args.engine != "all" or args.codec != "identity":
-        ap.error("--engine/--codec/--json only apply to --dry-run; the "
-                 "measured path always runs the full figure suite")
+        ap.error("--engine/--codec/--json only apply to --dry-run/--exec; "
+                 "the measured path always runs the full figure suite")
 
     from . import (
         autotune_bench, fig5_config_sweep, fig6_so2dr_vs_resreu,

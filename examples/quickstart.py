@@ -34,15 +34,20 @@ def main():
         plan = eng.compile(x.shape[0], x.shape[1], st, n, itemsize=x.itemsize)
         # 2. dry run: exact accounting straight off the plan
         _, stats = DryRunExecutor().execute(plan)
-        # 3. execute: eager and double-buffered walk the same plan
-        out, _ = EagerExecutor().execute(plan, x)
+        # 3. execute: eager and double-buffered walk the same lowered
+        #    stage programs (see repro.core.lower)
+        ex = EagerExecutor()
+        out, _ = ex.execute(plan, x)
         out_db, _ = DoubleBufferedExecutor().execute(plan, x)
         assert np.array_equal(out, out_db), "pipelining must not change results"
         err = np.abs(out - ref).max() / np.abs(ref).max()
         t = times_from_plan(plan, TPU_V5E)
         ops = plan.op_counts()
+        es = ex.exec_stats
         print(f"{eng.name:8s} max_rel_err={err:.2e}  "
-              f"plan={len(plan)} ops ({ops.get('FusedKernel', 0)} kernels)  "
+              f"plan={len(plan)} ops ({ops.get('FusedKernel', 0)} kernels, "
+              f"{es.kernel_compiles} compiled via {es.shape_buckets} shape "
+              f"buckets)  "
               f"h2d={stats.h2d_bytes/1e6:.1f}MB  "
               f"redundant={stats.redundancy*100:.1f}%  "
               f"kernel_phase={t.kernel*1e6:.0f}us  "

@@ -32,6 +32,7 @@ class Hardware:
     peak_mxu_flops: float  # matrix unit peak (bf16), FLOP/s
     bw_ici: float = 0.0   # per-link inter-chip interconnect, bytes/s
     n_streams: int = 3    # paper fixes N_strm = 3 (double buffering + compute)
+    c_vmem: int = 0       # on-chip scratch (VMEM/shared mem), bytes; 0 = unmodeled
 
 
 # The paper's experimental machine (Table II) — used to sanity-check the
@@ -54,6 +55,7 @@ TPU_V5E = Hardware(
     peak_vpu_flops=3.9e12,   # fp32 vector peak (8 lanes*128 sublanes-ish * 2 * clock)
     peak_mxu_flops=197.0e12,  # bf16 MXU peak (assignment constant)
     bw_ici=50.0e9,           # per ICI link (assignment constant)
+    c_vmem=128 * 1024**2,    # v5e VMEM per core
 )
 
 

@@ -44,11 +44,14 @@ class Choice:
     time_s: float
     bottleneck: str          # "transfer" | "kernel"
     times: EngineTimes
+    kernel_impl: str = "pallas_db"   # dispatch-registry implementation
+    tile: Optional[tuple] = None     # VMEM tile (None = impl default)
 
     @property
     def config(self):
         return dict(engine=self.engine, d=self.d, s_tb=self.s_tb,
-                    k_on=self.k_on, codec=self.codec)
+                    k_on=self.k_on, codec=self.codec,
+                    kernel_impl=self.kernel_impl, tile=self.tile)
 
 
 def _bottleneck(t: EngineTimes, n_streams: int) -> str:
@@ -65,6 +68,8 @@ def autotune(
     s_tb_grid: Iterable[int] = (20, 40, 80, 160, 320, 640),
     k_on_grid: Iterable[int] = (1, 2, 4, 8),
     codecs: Iterable[str] = ("identity", "zrle"),
+    kernel_impls: Iterable[str] = ("reference", "pallas", "pallas_db"),
+    tile_grid: Iterable[Optional[tuple]] = (None,),
     b_elem: int = 4,
 ) -> List[Choice]:
     """Rank all feasible configs by modeled overlapped time (best first).
@@ -75,11 +80,25 @@ def autotune(
     wire bytes drive the transfer terms, so a codec only wins when the
     config is transfer-bound.
 
-    The default grid is lossless-only: the model charges no accuracy
-    cost, so a lossy codec like ``bf16`` would weakly dominate whenever
-    any transfer time exists and the tuner would silently recommend
-    re-quantizing numerics.  Callers who accept the bf16 error bound opt
-    in with ``codecs=("identity", "zrle", "bf16")``."""
+    The kernel-dispatch policy sweeps too: every candidate's kernel term
+    is re-evaluated per implementation in ``kernel_impls`` x VMEM tile in
+    ``tile_grid`` (``None`` = the implementation's default tile) via
+    :func:`repro.kernels.dispatch.modeled_kernel_time` — per-step HBM
+    streaming for the reference path, tile-apron overhead and DMA/compute
+    (non-)overlap for the Pallas paths.  Infeasible combinations (tile
+    set exceeding the modeled VMEM, unsupported stencil) are skipped.
+    The beyond-paper ``mxu`` recast is opt-in
+    (``kernel_impls=(..., "mxu")``): it changes which compute unit the
+    Sec. III model assumes, which the paper-faithful sweep should not do
+    silently.
+
+    The default codec grid is lossless-only: the model charges no
+    accuracy cost, so a lossy codec like ``bf16`` would weakly dominate
+    whenever any transfer time exists and the tuner would silently
+    recommend re-quantizing numerics.  Callers who accept the bf16 error
+    bound opt in with ``codecs=("identity", "zrle", "bf16")``."""
+    from repro.kernels.dispatch import modeled_kernel_time
+
     code = CodeSpec(sz=sz, radius=st.radius, b_elem=b_elem,
                     total_steps=n_steps, n_arrays=2)
     Y = X = sz + 2 * st.radius
@@ -96,20 +115,33 @@ def autotune(
                                             d, s_tb, k_on, b_elem)
                     except ValueError:
                         continue
+                    # kernel ops are codec-independent: model the
+                    # (impl, tile) kernel terms once per geometry
+                    kernel_terms = []
+                    for impl in kernel_impls:
+                        for tile in tile_grid:
+                            kt = modeled_kernel_time(base, hw, impl, tile)
+                            if kt is not None:
+                                kernel_terms.append((impl, tile, kt))
                     for codec in codecs:
                         try:
                             plan = compress_plan(base, codec)
                         except ValueError:
                             continue   # codec can't handle this itemsize
                         _, stats = DryRunExecutor().execute(plan)
-                        t = model_times(stats, hw)
-                        out.append(Choice(
-                            engine=engine, d=d, s_tb=s_tb, k_on=k_on,
-                            codec=codec,
-                            time_s=t.total_overlapped(hw.n_streams),
-                            bottleneck=_bottleneck(t, hw.n_streams),
-                            times=t,
-                        ))
+                        t_base = model_times(stats, hw)
+                        for impl, tile, (k_s, mem_s, cmp_s) in kernel_terms:
+                            t = dataclasses.replace(
+                                t_base, kernel=k_s, kernel_mem=mem_s,
+                                kernel_compute=cmp_s)
+                            out.append(Choice(
+                                engine=engine, d=d, s_tb=s_tb, k_on=k_on,
+                                codec=codec,
+                                time_s=t.total_overlapped(hw.n_streams),
+                                bottleneck=_bottleneck(t, hw.n_streams),
+                                times=t,
+                                kernel_impl=impl, tile=tile,
+                            ))
     out.sort(key=lambda c: c.time_s)
     return out
 

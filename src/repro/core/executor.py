@@ -14,6 +14,17 @@ Three interpreters of the same op schedule:
   plan-derived :class:`TransferStats`; the autotuner costs the whole
   configuration sweep with it.
 
+The device executors run plans through the lowering layer by default
+(:func:`repro.core.lower.lower`): ops become per-(round, chunk) stage
+programs of pre-bound closures (no per-op ``isinstance`` dispatch),
+FusedKernel ops resolve through the kernel-dispatch registry
+(:mod:`repro.kernels.dispatch`), band heights are padded to per-plan
+shape buckets so chunks/rounds share one compiled kernel signature, and
+an :class:`~repro.core.lower.ExecStats` with per-op-class wall clock and
+compilation-cache counters lands on ``executor.exec_stats`` after every
+run.  ``lowered=False`` falls back to the original op-at-a-time
+interpreter (:class:`_DeviceState`) — results are bitwise identical.
+
 All executors return ``(host_array | None, TransferStats)`` where the
 stats always come from :meth:`ExecutionPlan.stats` — accounting is a
 property of the *plan*, not of how it was executed.
@@ -27,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compress import get_codec
+from .lower import ExecStats, KernelCache, lower, validate_domain
 from .plan import (
     BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
     FusedKernel, H2D, HostCommit, TransferStats,
@@ -64,7 +76,7 @@ class _StagedWrite:
 
 
 class _DeviceState:
-    """Register/buffer/staging state shared by the device executors.
+    """Register/buffer/staging state for the legacy op-at-a-time path.
 
     Codec ops run for real: the ``Compress``/``Decompress`` pairs the
     rewrite pass emits encode the transferred rows into an actual byte
@@ -76,7 +88,12 @@ class _DeviceState:
     HostCommit barrier — the first point the device bytes are forced
     anyway — so compression never introduces a per-chunk sync.  Lossless
     codecs therefore round-trip bit-exactly through real encoded bytes;
-    accounting still comes from the plan."""
+    accounting still comes from the plan.
+
+    The ``identity`` codec is fast-pathed: its encode/decode is a pure
+    byte copy, so the round trip is skipped entirely — the H2D/D2H is
+    already the copy — while wire-byte accounting (plan-derived) is
+    untouched."""
 
     def __init__(self, host: np.ndarray, fused_step: FusedStep):
         self.host = host
@@ -95,6 +112,8 @@ class _DeviceState:
         self.regs[op.reg] = jnp.asarray(self.host[op.host_lo:op.host_hi])
 
     def _compress(self, op: Compress) -> None:
+        if op.codec == "identity":
+            return   # fast path: the transfer op itself is the pure copy
         if op.direction == "h2d":
             rows = self.host[op.host_lo:op.host_hi]
             payload = get_codec(op.codec).encode(rows)
@@ -104,6 +123,8 @@ class _DeviceState:
             self.d2h_codec[op.reg] = op.codec   # encode happens at the D2H
 
     def _decompress(self, op: Decompress) -> None:
+        if op.codec == "identity":
+            return
         if op.direction == "h2d":
             payload, shape, dtype = self.h2d_wire.pop(op.reg)
             decoded = get_codec(op.codec).decode(np.asarray(payload), shape, dtype)
@@ -158,34 +179,69 @@ class _DeviceState:
         self.staged.clear()
 
 
-def _prepare_host(plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
-    if x.shape != (plan.Y, plan.X):
-        raise ValueError(f"domain {x.shape} does not match plan "
-                         f"({plan.Y}, {plan.X})")
-    if x.dtype.itemsize != plan.itemsize:
-        raise ValueError(f"dtype itemsize {x.dtype.itemsize} does not match "
-                         f"plan itemsize {plan.itemsize}")
-    return np.asarray(x).copy()
+class _LoweredExecutorBase:
+    """Shared compile-then-run machinery for the device executors."""
 
+    name = "base"
+    _pipeline = False
 
-class EagerExecutor:
-    """In-order interpreter: one op at a time, plan order."""
+    def __init__(self, fused_step: Optional[FusedStep] = None,
+                 policy=None, lowered: bool = True):
+        self.fused_step = fused_step
+        self.policy = policy
+        self.lowered = lowered
+        # kernel-signature cache shared across execute() calls: re-running
+        # a plan (or one with the same shape buckets) is all hits
+        self.kernel_cache = KernelCache()
+        self.exec_stats: Optional[ExecStats] = None
+        # single-entry lowering memo: (plan, fused_step, policy, compiled).
+        # Holding the plan keeps `is` identity sound, and comparing the
+        # fused_step/policy snapshot invalidates the memo if either public
+        # attribute is swapped between runs.
+        self._lowered_memo = None
 
-    name = "eager"
-
-    def __init__(self, fused_step: Optional[FusedStep] = None):
-        self.fused_step = fused_step or multi_step_band
+    def _compiled(self, plan: ExecutionPlan):
+        memo = self._lowered_memo
+        if (memo is not None and memo[0] is plan
+                and memo[1] is self.fused_step and memo[2] == self.policy):
+            return memo[3]
+        compiled = lower(plan, policy=self.policy, fused_step=self.fused_step,
+                         kernel_cache=self.kernel_cache)
+        self._lowered_memo = (plan, self.fused_step, self.policy, compiled)
+        return compiled
 
     def execute(self, plan: ExecutionPlan,
                 x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
-        state = _DeviceState(_prepare_host(plan, x), self.fused_step)
+        if self.lowered:
+            host, stats, exec_stats = self._compiled(plan).execute(
+                x, pipeline=self._pipeline)
+            exec_stats.executor = self.name
+            self.exec_stats = exec_stats
+            return host, stats
+        host, stats = self._execute_legacy(plan, x)
+        self.exec_stats = None
+        return host, stats
+
+    def _execute_legacy(self, plan, x):
+        raise NotImplementedError
+
+
+class EagerExecutor(_LoweredExecutorBase):
+    """In-order interpreter: one stage program at a time, plan order."""
+
+    name = "eager"
+    _pipeline = False
+
+    def _execute_legacy(self, plan, x):
+        state = _DeviceState(validate_domain(plan, x),
+                             self.fused_step or multi_step_band)
         for op in plan.ops:
             state.issue(op)
         state.commit()   # no-op unless a planner forgot the final barrier
         return state.host, plan.stats()
 
 
-class DoubleBufferedExecutor:
+class DoubleBufferedExecutor(_LoweredExecutorBase):
     """Software-pipelined interpreter (the paper's multi-stream overlap).
 
     Walks the plan stage-by-stage (one stage per ``(round, chunk)``).
@@ -199,13 +255,11 @@ class DoubleBufferedExecutor:
     """
 
     name = "double_buffered"
+    _pipeline = True
 
-    def __init__(self, fused_step: Optional[FusedStep] = None):
-        self.fused_step = fused_step or multi_step_band
-
-    def execute(self, plan: ExecutionPlan,
-                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
-        state = _DeviceState(_prepare_host(plan, x), self.fused_step)
+    def _execute_legacy(self, plan, x):
+        state = _DeviceState(validate_domain(plan, x),
+                             self.fused_step or multi_step_band)
         stages = plan.stages()
         prefetched: set = set()
         for j, (key, ops) in enumerate(stages):
@@ -249,11 +303,12 @@ EXECUTORS = {e.name: e for e in
              (EagerExecutor, DoubleBufferedExecutor, DryRunExecutor)}
 
 
-def get_executor(name: str, fused_step: Optional[FusedStep] = None):
+def get_executor(name: str, fused_step: Optional[FusedStep] = None,
+                 policy=None):
     try:
         cls = EXECUTORS[name]
     except KeyError:
         raise KeyError(f"unknown executor {name!r}; known: {sorted(EXECUTORS)}")
     if cls is DryRunExecutor:
         return cls()
-    return cls(fused_step)
+    return cls(fused_step, policy=policy)

@@ -1,0 +1,529 @@
+"""Plan lowering: stage programs, slot-bound closures, shape-bucketed cache.
+
+The executors in :mod:`repro.core.executor` used to *interpret* every op
+of an :class:`~repro.core.plan.ExecutionPlan` through a Python
+``isinstance`` chain, with registers/buffers living in name-keyed dicts
+and the fused step re-traced by JAX for every distinct band height (every
+``band:r{rnd}c{i}`` register has its own shape, so a d-chunk, R-round
+plan presented up to ``d*R`` signatures per kernel).  This module
+compiles the plan once instead:
+
+* **stage programs** — :func:`lower` groups ops into per-``(round,
+  chunk)`` stages of *pre-bound closures*: register/buffer names are
+  resolved to integer slots, slice bounds and codec objects are baked
+  into each closure, and per-op type dispatch disappears from the
+  execution loop (it runs ``for tag, fn in stage: fn(rt)``).
+* **kernel dispatch** — FusedKernel ops are resolved through the
+  registry in :mod:`repro.kernels.dispatch` (reference jnp, Pallas,
+  DMA-overlapped Pallas, banded-MXU) exactly once at lowering time.
+* **shape bucketing** — band heights are padded up to per-plan buckets
+  (one bucket per ``(stencil, steps, keep_top, keep_bottom)`` group, the
+  group's max height) so all chunks and rounds share one compiled kernel
+  signature.  Padding is on the frame-free side and the output is sliced
+  back to the true height, so results are bit-identical: a valid output
+  row never reads a pad row (output row ``i`` depends on input rows
+  ``[i - m*r, i + m*r]`` intersected with the band).  Bands framed on
+  both sides (``keep_top and keep_bottom``) are never padded.
+* **compilation cache** — a :class:`KernelCache` keyed by
+  ``(impl, stencil, steps, keeps, bucket_height, width, itemsize)``
+  counts distinct signatures; hits/misses surface in :class:`ExecStats`
+  alongside wall-clock per op class.  The d=8, 4-round SO2DR config
+  compiles at most one kernel per shape bucket instead of one per
+  chunk x round.
+
+Accounting is untouched: :meth:`CompiledPlan.execute` still returns the
+plan-derived :class:`~repro.core.plan.TransferStats`, so dry-run numbers,
+autotune sweeps, and the CI bench-gate see identical bytes whether or
+not a plan is lowered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compress import get_codec
+from .plan import (
+    BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
+    FusedKernel, H2D, HostCommit, TransferStats,
+)
+
+__all__ = [
+    "ExecStats", "KernelCache", "CompiledPlan", "LoweredStage", "lower",
+    "validate_domain",
+]
+
+# op-class tags (indices into the per-class wall-clock accumulators)
+OP_TAGS = ("H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel",
+           "HostCommit", "Compress", "Decompress")
+_TAG = {name: i for i, name in enumerate(OP_TAGS)}
+
+BoundOp = Tuple[int, Callable]          # (tag, closure over the runtime)
+
+
+@dataclasses.dataclass
+class ExecStats:
+    """Execution-side counters (wall clock + compilation cache), the
+    companion of the plan-side :class:`~repro.core.plan.TransferStats`.
+
+    Wall-clock numbers are host-observed dispatch+compute time per op
+    class — meaningful for comparing executors/kernels on one machine,
+    never for gating CI (the cache/op counters are the deterministic
+    part)."""
+
+    executor: str = ""
+    kernel_impl: str = ""
+    op_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    op_wall_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    kernel_calls: int = 0
+    shape_buckets: int = 0         # distinct kernel signatures after bucketing
+    kernel_compiles: int = 0       # cache misses this run (new signatures)
+    kernel_cache_hits: int = 0
+    stage_count: int = 0
+    lower_s: float = 0.0
+    wall_s: float = 0.0
+
+    @property
+    def kernel_cache_misses(self) -> int:
+        return self.kernel_compiles
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["kernel_cache_misses"] = self.kernel_compiles
+        return d
+
+
+class KernelCache:
+    """Keyed compilation cache for fused-kernel callables.
+
+    One entry per kernel *signature* ``(impl, stencil, steps, keep_top,
+    keep_bottom, bucket_height, width, itemsize)`` — the same key set
+    JAX's jit cache traces on, so ``misses`` counts actual retraces and
+    ``hits`` counts dispatches that reuse a compiled kernel.  Executors
+    hold one cache across ``execute()`` calls, so re-running a plan (or
+    running another plan with the same buckets) is all hits."""
+
+    def __init__(self):
+        self._entries: Dict[tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key: tuple, make: Callable[[], Callable]) -> Callable:
+        fn = self._entries.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._entries[key] = make()
+        else:
+            self.hits += 1
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class _Runtime:
+    """Slot-indexed register/buffer/staging state the bound closures run
+    against (the lowered counterpart of the executors' old name-keyed
+    device state)."""
+
+    __slots__ = ("host", "regs", "bufs", "staged", "wire")
+
+    def __init__(self, host: np.ndarray, n_regs: int, n_bufs: int):
+        self.host = host
+        self.regs: List = [None] * n_regs
+        self.bufs: List = [None] * n_bufs
+        # staged D2H rows: (host_lo, host_hi, device rows, codec name|None)
+        self.staged: List[tuple] = []
+        # reg slot -> (payload, shape, dtype) between a non-identity
+        # Compress(h2d) and its Decompress
+        self.wire: Dict[int, tuple] = {}
+
+    def commit(self) -> None:
+        for _, _, rows, _ in self.staged:
+            jax.block_until_ready(rows)
+        for host_lo, host_hi, rows, codec_name in self.staged:
+            rows = np.asarray(rows)
+            if codec_name is not None:
+                # the wire round trip: device-side encode, host-side decode
+                codec = get_codec(codec_name)
+                rows = codec.decode(codec.encode(rows), rows.shape, rows.dtype)
+            self.host[host_lo:host_hi] = rows
+        self.staged.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredStage:
+    """One pipeline stage: all bound ops in plan order, pre-split into
+    the prefetchable prefix (H2D + host-side Compress — ops that only
+    read committed host rows and write fresh slots) and the rest."""
+
+    key: Optional[Tuple[int, int]]      # (round, chunk); None = barrier
+    ops: Tuple[BoundOp, ...]
+    prefetch: Tuple[BoundOp, ...]
+    rest: Tuple[BoundOp, ...]
+
+
+def validate_domain(plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
+    """Check a host domain against the plan geometry; return a mutable copy."""
+    if x.shape != (plan.Y, plan.X):
+        raise ValueError(f"domain {x.shape} does not match plan "
+                         f"({plan.Y}, {plan.X})")
+    if x.dtype.itemsize != plan.itemsize:
+        raise ValueError(f"dtype itemsize {x.dtype.itemsize} does not match "
+                         f"plan itemsize {plan.itemsize}")
+    return np.asarray(x).copy()
+
+
+def _noop(rt) -> None:
+    return None
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A lowered :class:`ExecutionPlan`: stage programs of slot-bound
+    closures plus the kernel-signature cache they dispatch through."""
+
+    plan: ExecutionPlan
+    stages: Tuple[LoweredStage, ...]
+    n_reg_slots: int
+    n_buf_slots: int
+    kernel_impl: str
+    shape_buckets: int
+    cache: KernelCache
+    lower_s: float
+
+    def describe(self) -> dict:
+        """Deterministic lowering metrics (no execution): what the CI
+        bench-gate records next to the plan's byte accounting."""
+        chunk_stages = sum(1 for s in self.stages if s.key is not None)
+        return {
+            "stage_count": chunk_stages,
+            "shape_buckets": self.shape_buckets,
+            "kernel_impl": self.kernel_impl,
+            "reg_slots": self.n_reg_slots,
+            "buf_slots": self.n_buf_slots,
+        }
+
+    def execute(self, x: np.ndarray, pipeline: bool = False,
+                ) -> Tuple[np.ndarray, TransferStats, ExecStats]:
+        """Run the stage programs.
+
+        ``pipeline=True`` issues the next stage's prefetchable ops (H2D
+        and host-side Compress) before the current stage's kernels — the
+        double-buffered schedule; results are bitwise identical either
+        way because prefetched ops only read committed host rows."""
+        rt = _Runtime(validate_domain(self.plan, x),
+                      self.n_reg_slots, self.n_buf_slots)
+        wall = [0.0] * len(OP_TAGS)
+        counts = [0] * len(OP_TAGS)
+        hits0, miss0 = self.cache.hits, self.cache.misses
+        perf = time.perf_counter
+        t_run = perf()
+
+        def run(ops: Tuple[BoundOp, ...]) -> None:
+            for tag, fn in ops:
+                t0 = perf()
+                fn(rt)
+                wall[tag] += perf() - t0
+                counts[tag] += 1
+
+        stages = self.stages
+        if not pipeline:
+            for stage in stages:
+                run(stage.ops)
+        else:
+            n = len(stages)
+            prefetched = [False] * n
+            for j, stage in enumerate(stages):
+                if stage.key is None:       # HostCommit barrier
+                    run(stage.ops)
+                    continue
+                # prefetch the next chunk's transfers under this chunk's
+                # kernels; never across a barrier (host rows change there)
+                if j + 1 < n and stages[j + 1].key is not None:
+                    run(stages[j + 1].prefetch)
+                    prefetched[j + 1] = True
+                run(stage.rest if prefetched[j] else stage.ops)
+        rt.commit()   # no-op unless a planner forgot the final barrier
+
+        stats = ExecStats(
+            kernel_impl=self.kernel_impl,
+            op_counts={OP_TAGS[i]: c for i, c in enumerate(counts) if c},
+            op_wall_s={OP_TAGS[i]: wall[i] for i, c in enumerate(counts) if c},
+            kernel_calls=counts[_TAG["FusedKernel"]],
+            shape_buckets=self.shape_buckets,
+            kernel_compiles=self.cache.misses - miss0,
+            kernel_cache_hits=self.cache.hits - hits0,
+            stage_count=sum(1 for s in stages if s.key is not None),
+            lower_s=self.lower_s,
+            wall_s=perf() - t_run,
+        )
+        return rt.host, self.plan.stats(), stats
+
+
+class _SlotAllocator:
+    """Linear-scan name->slot assignment with *delayed* slot reuse.
+
+    Registers and buffers die at statically known ops, so slots can be
+    recycled — but not immediately: the pipelined executor issues stage
+    ``k``'s prefetchable ops (H2D / host-side Compress) before stage
+    ``k-1``'s ops run, so a slot freed in stage ``k-1`` is still being
+    read when stage ``k``'s prefetch would write it.  Holding every freed
+    slot out of the pool for two chunk stages guarantees a reused slot's
+    last touch strictly precedes the earliest point the pipeline can
+    write it again (the prefetch of the stage after next)."""
+
+    REUSE_DELAY = 2
+
+    def __init__(self):
+        self._live: Dict[str, int] = {}
+        self._free: List[int] = []
+        self._pending: List[Tuple[int, int]] = []   # (freed_at_stage, slot)
+        self.n_slots = 0
+
+    def new_stage(self, ordinal: int) -> None:
+        """Called when lowering enters chunk stage ``ordinal``: slots
+        freed at least ``REUSE_DELAY`` stages ago become reusable."""
+        keep = []
+        for freed_at, slot in self._pending:
+            if freed_at <= ordinal - self.REUSE_DELAY:
+                self._free.append(slot)
+            else:
+                keep.append((freed_at, slot))
+        self._pending = keep
+
+    def alloc(self, name: str) -> int:
+        assert name not in self._live, f"slot name {name!r} already live"
+        if self._free:
+            slot = self._free.pop()
+        else:
+            slot = self.n_slots
+            self.n_slots += 1
+        self._live[name] = slot
+        return slot
+
+    def get(self, name: str) -> int:
+        return self._live[name]
+
+    def free(self, name: str, stage_ordinal: int) -> int:
+        slot = self._live.pop(name)
+        self._pending.append((stage_ordinal, slot))
+        return slot
+
+
+def _bucket_heights(plan: ExecutionPlan, bucket: bool) -> Dict[tuple, int]:
+    """Per-group padded band heights: one bucket per ``(stencil, steps,
+    keep_top, keep_bottom)`` group (its max h_in).  Both-sides-framed
+    bands are excluded — there is no frame-free side to pad."""
+    buckets: Dict[tuple, int] = {}
+    if not bucket:
+        return buckets
+    for op in plan.ops:
+        if isinstance(op, FusedKernel) and not (op.keep_top and op.keep_bottom):
+            key = (op.stencil, op.steps, op.keep_top, op.keep_bottom)
+            buckets[key] = max(buckets.get(key, 0), op.h_in)
+    return buckets
+
+
+def _bind_kernel(slot: int, op: FusedKernel, bucket_h: int, impl_name: str,
+                 fn: Callable, cache: KernelCache, itemsize: int) -> Callable:
+    pad = bucket_h - op.h_in
+    # pad on the frame-free side; slice the true output back out
+    pad_top = op.keep_bottom and not op.keep_top
+    # id(fn) keeps the signature count honest when the same impl name
+    # resolves to a different callable (swapped fused_step, new tile):
+    # the cache entry holds fn alive, so its id cannot be reused while
+    # the key is live.  The callable itself is always the freshly
+    # resolved fn — the cache only counts, it never serves stale code.
+    key = (impl_name, id(fn), op.stencil, op.steps, op.keep_top,
+           op.keep_bottom, bucket_h, op.width, itemsize)
+    name, steps = op.stencil, op.steps
+    kt, kb = op.keep_top, op.keep_bottom
+    h_out = op.h_out
+
+    def run(rt):
+        cache.lookup(key, lambda: fn)
+        band = rt.regs[slot]
+        if pad:
+            z = jnp.zeros((pad, band.shape[1]), band.dtype)
+            band = jnp.concatenate([z, band] if pad_top else [band, z], axis=0)
+        out = fn(band, name, steps, keep_top=kt, keep_bottom=kb)
+        if pad:
+            out = out[out.shape[0] - h_out:] if pad_top else out[:h_out]
+        rt.regs[slot] = out
+
+    return run
+
+
+def lower(plan: ExecutionPlan, policy=None, fused_step=None,
+          kernel_cache: Optional[KernelCache] = None) -> CompiledPlan:
+    """Compile a plan into stage programs of slot-bound closures.
+
+    ``fused_step`` (an explicit ``fn(band, name, steps, keep_top=...,
+    keep_bottom=...)`` callable) overrides the dispatch registry;
+    otherwise ``policy`` (a :class:`repro.kernels.dispatch.DispatchPolicy`,
+    default ``auto``) picks the implementation per stencil/steps/backend.
+    ``kernel_cache`` lets an executor share one signature cache across
+    plans and runs."""
+    from repro.kernels.dispatch import DispatchPolicy, select_kernel
+
+    t0 = time.perf_counter()
+    policy = policy or DispatchPolicy()
+    cache = kernel_cache if kernel_cache is not None else KernelCache()
+    buckets = _bucket_heights(plan, policy.bucket)
+
+    regs = _SlotAllocator()
+    bufs = _SlotAllocator()
+    # (stencil, steps) -> (impl_name, callable); resolved once at lower time
+    kernels: Dict[tuple, Tuple[str, Callable]] = {}
+    # statically tracked codec context between a Compress and its transfer
+    pending_h2d: Dict[str, str] = {}    # reg -> codec (non-identity, h2d)
+    pending_d2h: Dict[str, str] = {}    # reg -> codec (non-identity, d2h)
+
+    signatures = set()
+    stages: List[List] = []             # [key, [BoundOp...]]
+    chunk_ordinal = -1                  # index of the current chunk stage
+
+    def emit(key, tag: str, fn: Callable) -> None:
+        if stages and stages[-1][0] == key and key is not None:
+            stages[-1][1].append((_TAG[tag], fn))
+        else:
+            stages.append([key, [(_TAG[tag], fn)]])
+
+    for op in plan.ops:
+        if isinstance(op, HostCommit):
+            emit(None, "HostCommit", _Runtime.commit)
+            continue
+        key = (op.round, op.chunk)
+        if not stages or stages[-1][0] != key:
+            chunk_ordinal += 1
+            regs.new_stage(chunk_ordinal)
+            bufs.new_stage(chunk_ordinal)
+        if isinstance(op, Compress):
+            if op.direction == "h2d":
+                codec = get_codec(op.codec)
+                if codec.name == "identity":
+                    # identity fast path: skip the encode/decode byte
+                    # round trip — the H2D itself is the (pure) copy;
+                    # wire-byte accounting stays plan-derived
+                    emit(key, "Compress", _noop)
+                else:
+                    slot = regs.alloc(op.reg)   # H2D binds as the wire hop
+                    pending_h2d[op.reg] = op.codec
+                    lo, hi = op.host_lo, op.host_hi
+
+                    def run(rt, _s=slot, _lo=lo, _hi=hi, _c=codec):
+                        rows = rt.host[_lo:_hi]
+                        rt.wire[_s] = (jnp.asarray(_c.encode(rows)),
+                                       rows.shape, rows.dtype)
+
+                    emit(key, "Compress", run)
+            else:
+                if op.codec != "identity":
+                    pending_d2h[op.reg] = op.codec
+                emit(key, "Compress", _noop)
+        elif isinstance(op, Decompress):
+            if op.direction == "h2d" and op.codec != "identity":
+                slot = regs.get(op.reg)
+                codec = get_codec(op.codec)
+
+                def run(rt, _s=slot, _c=codec):
+                    payload, shape, dtype = rt.wire.pop(_s)
+                    rt.regs[_s] = jnp.asarray(
+                        _c.decode(np.asarray(payload), shape, dtype))
+
+                emit(key, "Decompress", run)
+            else:
+                # d2h decode runs at the HostCommit barrier (the first
+                # point the device bytes are forced anyway)
+                emit(key, "Decompress", _noop)
+        elif isinstance(op, H2D):
+            if op.reg in pending_h2d:
+                # the wire hop already carried the encoded payload
+                del pending_h2d[op.reg]
+                emit(key, "H2D", _noop)
+            else:
+                slot = regs.alloc(op.reg)
+                lo, hi = op.host_lo, op.host_hi
+
+                def run(rt, _s=slot, _lo=lo, _hi=hi):
+                    rt.regs[_s] = jnp.asarray(rt.host[_lo:_hi])
+
+                emit(key, "H2D", run)
+        elif isinstance(op, BufferWrite):
+            rslot = regs.get(op.reg)
+            bslot = bufs.alloc(op.buf)
+            lo, hi = op.reg_lo, op.reg_hi
+
+            def run(rt, _b=bslot, _r=rslot, _lo=lo, _hi=hi):
+                rt.bufs[_b] = rt.regs[_r][_lo:_hi]
+
+            emit(key, "BufferWrite", run)
+        elif isinstance(op, BufferRead):
+            bslot = bufs.free(op.buf, chunk_ordinal)    # consumed exactly once
+            src_slot = regs.free(op.src, chunk_ordinal)  # src dies here
+            dst_slot = regs.alloc(op.reg)
+
+            def run(rt, _b=bslot, _src=src_slot, _dst=dst_slot):
+                shared = rt.bufs[_b]
+                rt.bufs[_b] = None
+                src = rt.regs[_src]
+                if _src != _dst:
+                    rt.regs[_src] = None
+                rt.regs[_dst] = jnp.concatenate([shared, src], axis=0)
+
+            emit(key, "BufferRead", run)
+        elif isinstance(op, FusedKernel):
+            slot = regs.get(op.reg)
+            kkey = (op.stencil, op.steps)
+            if kkey not in kernels:
+                if fused_step is not None:
+                    kernels[kkey] = ("explicit", fused_step)
+                else:
+                    kernels[kkey] = select_kernel(op.stencil, op.steps, policy)
+            impl_name, fn = kernels[kkey]
+            gkey = (op.stencil, op.steps, op.keep_top, op.keep_bottom)
+            bucket_h = buckets.get(gkey, op.h_in)
+            signatures.add(gkey + (bucket_h,))
+            emit(key, "FusedKernel",
+                 _bind_kernel(slot, op, bucket_h, impl_name, fn, cache,
+                              plan.itemsize))
+        elif isinstance(op, D2H):
+            slot = regs.free(op.reg, chunk_ordinal)   # last use of the register
+            codec_name = pending_d2h.pop(op.reg, None)
+            rlo, rhi, hlo, hhi = op.reg_lo, op.reg_hi, op.host_lo, op.host_hi
+
+            def run(rt, _s=slot, _rlo=rlo, _rhi=rhi, _hlo=hlo, _hhi=hhi,
+                    _codec=codec_name):
+                band = rt.regs[_s]
+                rt.regs[_s] = None
+                rt.staged.append((_hlo, _hhi, band[_rlo:_rhi], _codec))
+
+            emit(key, "D2H", run)
+        else:  # pragma: no cover - planner/lowering version skew
+            raise TypeError(f"unknown op {op!r}")
+
+    impl_names = sorted({name for name, _ in kernels.values()})
+    lowered_stages = []
+    for key, ops in stages:
+        ops = tuple(ops)
+        prefetch = tuple(
+            (tag, fn) for tag, fn in ops
+            if tag == _TAG["H2D"] or tag == _TAG["Compress"])
+        rest = tuple(b for b in ops if b not in prefetch)
+        lowered_stages.append(LoweredStage(key=key, ops=ops,
+                                           prefetch=prefetch, rest=rest))
+    return CompiledPlan(
+        plan=plan,
+        stages=tuple(lowered_stages),
+        n_reg_slots=regs.n_slots,
+        n_buf_slots=bufs.n_slots,
+        kernel_impl="+".join(impl_names) if impl_names else "none",
+        shape_buckets=len(signatures),
+        cache=cache,
+        lower_s=time.perf_counter() - t0,
+    )

@@ -48,7 +48,8 @@ class _EngineBase:
     name: str = "base"
 
     def __init__(self, d: int, k_off: int, k_on: int,
-                 fused_step: Optional[FusedStep] = None, codec=None):
+                 fused_step: Optional[FusedStep] = None, codec=None,
+                 policy=None):
         self.d = d
         self.k_off = k_off
         self.k_on = k_on
@@ -57,6 +58,9 @@ class _EngineBase:
         # the schedule uncompressed.  Applied by the builder at build()
         # time, so planner subclasses stay codec-oblivious.
         self.codec = codec
+        # kernel-dispatch policy (repro.kernels.dispatch.DispatchPolicy);
+        # None = auto.  Only consulted when fused_step is not given.
+        self.policy = policy
 
     def _chunks(self, Y: int, X: int, st: Stencil) -> ChunkPlan:
         plan = make_chunk_plan(Y, X, st.radius, self.d)
@@ -84,7 +88,7 @@ class _EngineBase:
         """Compile + eager execution (the historical engine API)."""
         plan = self.compile(x.shape[0], x.shape[1], st, n,
                             itemsize=x.dtype.itemsize)
-        return EagerExecutor(self.fused_step).execute(plan, x)
+        return EagerExecutor(self.fused_step, policy=self.policy).execute(plan, x)
 
 
 class InCore(_EngineBase):
@@ -220,12 +224,13 @@ ENGINES = {e.name: e for e in (InCore, NaiveTB, ResReu, SO2DR)}
 
 
 def get_engine(name: str, d: int, k_off: int, k_on: int, fused_step=None,
-               codec=None) -> _EngineBase:
+               codec=None, policy=None) -> _EngineBase:
     try:
         cls = ENGINES[name]
     except KeyError:
         raise KeyError(f"unknown engine {name!r}; known: {sorted(ENGINES)}")
-    return cls(d=d, k_off=k_off, k_on=k_on, fused_step=fused_step, codec=codec)
+    return cls(d=d, k_off=k_off, k_on=k_on, fused_step=fused_step, codec=codec,
+               policy=policy)
 
 
 def compile_plan(engine: str, st: Stencil, Y: int, X: int, n: int,

@@ -3,5 +3,22 @@
 * stencil_multistep     — k_on-step fused kernel (VMEM-resident steps)
 * stencil_multistep_db  — + DMA/compute overlap (double buffering)
 * stencil_banded_mxu    — beyond-paper MXU recast for high radii
+* dispatch              — registry selecting the best implementation per
+                          (stencil kind, radius, steps, backend)
 * ops                   — jit'd wrappers;  ref — pure-jnp oracles
+
+Shared tiling constants/helpers live here so the three kernel modules
+agree on one definition (they used to carry private copies).
 """
+from __future__ import annotations
+
+__all__ = ["DEFAULT_TILE", "MXU_TILE", "ceil_div"]
+
+# default VMEM tile for the VPU kernels (rows, lanes)
+DEFAULT_TILE = (256, 512)
+# MXU-native tile: lane dim 128 matches the systolic array
+MXU_TILE = (DEFAULT_TILE[0], 128)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)

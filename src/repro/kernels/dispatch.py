@@ -1,0 +1,309 @@
+"""Kernel-dispatch registry: pick the best fused-step implementation.
+
+The paper's win is on *kernel execution* (Sec. V: 2.78x over the
+redundancy-free out-of-core code), so which fused-kernel implementation
+runs a plan's :class:`~repro.core.plan.FusedKernel` ops matters as much
+as the schedule itself.  This module is the single place that knows the
+candidates and when each one wins:
+
+=============  ====================================================
+impl           when it wins
+=============  ====================================================
+reference      pure-jnp oracle (:func:`multi_step_band`); fastest on
+               CPU/interpret backends, and the numerics ground truth
+pallas         VMEM-resident k_on-step kernel — on-chip reuse on TPU
+pallas_db      + DMA/compute overlap (two VMEM slots); the steady-state
+               TPU choice
+mxu            banded-matmul recast; linear stencils whose radius makes
+               the VPU path compute-bound (``mxu_wins``)
+=============  ====================================================
+
+:func:`select_kernel` resolves a :class:`DispatchPolicy` (``auto`` or an
+explicit impl name) against ``(stencil, steps, backend)`` and returns a
+``fused_step`` callable with the engine-facing signature
+``fn(band, name, steps, keep_top=..., keep_bottom=...)``.  Implementation
+modules are imported lazily so the default reference path never pulls
+Pallas in.
+
+:func:`modeled_kernel_time` is the autotuner hook: the Sec. III kernel
+term specialised per implementation (per-step HBM streaming for the
+reference path, tile-apron overhead and DMA/compute serialisation for the
+Pallas paths, MXU-flop recast for the banded path), so the dispatch
+policy and tile size sweep alongside ``(d, S_TB, k_on, codec)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.stencil import Stencil, get_stencil
+from repro.kernels import DEFAULT_TILE, MXU_TILE, ceil_div
+
+__all__ = [
+    "DispatchPolicy", "KernelImpl", "KERNEL_IMPLS",
+    "register_kernel_impl", "select_kernel", "modeled_kernel_time",
+]
+
+# engine-facing fused-step signature:
+#   fn(band, stencil_name, steps, keep_top=..., keep_bottom=...) -> band
+FusedStep = Callable[..., "jax.Array"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchPolicy:
+    """How the lowering layer resolves FusedKernel ops to device code.
+
+    ``impl``      — registry name, or ``"auto"`` (backend-driven choice).
+    ``tile``      — VMEM tile override for the Pallas paths (None = the
+                    implementation's default).
+    ``interpret`` — force/deny Pallas interpret mode (None = interpret
+                    off-TPU, compiled on TPU).
+    ``backend``   — override backend detection (``"tpu"``/``"cpu"``/...);
+                    None = ``jax.default_backend()``.
+    ``bucket``    — let the lowering pass pad band heights to per-plan
+                    shape buckets so chunks/rounds share one compiled
+                    kernel signature (see :mod:`repro.core.lower`).
+    """
+
+    impl: str = "auto"
+    tile: Optional[Tuple[int, int]] = None
+    interpret: Optional[bool] = None
+    backend: Optional[str] = None
+    bucket: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered fused-kernel implementation."""
+
+    name: str
+    description: str
+    make: Callable[[DispatchPolicy], FusedStep]   # lazy-imports the module
+    supports: Callable[[Stencil, int], bool]      # (stencil, steps) -> ok
+    default_tile: Tuple[int, int] = DEFAULT_TILE
+    vmem_slots: int = 1      # apron'd tiles resident at once (db = 2)
+
+
+def _interpret(policy: DispatchPolicy) -> bool:
+    if policy.interpret is not None:
+        return policy.interpret
+    return (policy.backend or jax.default_backend()) != "tpu"
+
+
+def _make_reference(policy: DispatchPolicy) -> FusedStep:
+    from repro.core.reference import multi_step_band
+
+    return multi_step_band
+
+
+def _make_pallas(policy: DispatchPolicy) -> FusedStep:
+    from repro.kernels.stencil_multistep import fused_stencil_band
+
+    tile = policy.tile or DEFAULT_TILE
+    interpret = _interpret(policy)
+
+    def step(band, name, steps, keep_top=False, keep_bottom=False):
+        return fused_stencil_band(band, name, steps, keep_top=keep_top,
+                                  keep_bottom=keep_bottom, tile=tile,
+                                  interpret=interpret)
+
+    return step
+
+
+def _make_pallas_db(policy: DispatchPolicy) -> FusedStep:
+    from repro.kernels.stencil_multistep_db import fused_stencil_band_db
+
+    tile = policy.tile or DEFAULT_TILE
+    interpret = _interpret(policy)
+
+    def step(band, name, steps, keep_top=False, keep_bottom=False):
+        return fused_stencil_band_db(band, name, steps, keep_top=keep_top,
+                                     keep_bottom=keep_bottom, tile=tile,
+                                     interpret=interpret)
+
+    return step
+
+
+def _make_mxu(policy: DispatchPolicy) -> FusedStep:
+    from repro.kernels.stencil_banded_mxu import banded_fused_stencil
+
+    tile = policy.tile or MXU_TILE
+    interpret = _interpret(policy)
+
+    def step(band, name, steps, keep_top=False, keep_bottom=False):
+        return banded_fused_stencil(band, name, steps, keep_top=keep_top,
+                                    keep_bottom=keep_bottom, tile=tile,
+                                    interpret=interpret)
+
+    return step
+
+
+KERNEL_IMPLS: Dict[str, KernelImpl] = {}
+
+
+def register_kernel_impl(impl: KernelImpl) -> KernelImpl:
+    if impl.name in KERNEL_IMPLS:
+        raise ValueError(f"kernel impl {impl.name!r} already registered")
+    KERNEL_IMPLS[impl.name] = impl
+    return impl
+
+
+register_kernel_impl(KernelImpl(
+    name="reference",
+    description="pure-jnp multi_step_band (oracle; per-step HBM streaming)",
+    make=_make_reference,
+    supports=lambda st, steps: True,
+))
+register_kernel_impl(KernelImpl(
+    name="pallas",
+    description="VMEM-resident k_on-step Pallas kernel (on-chip reuse)",
+    make=_make_pallas,
+    supports=lambda st, steps: True,
+))
+register_kernel_impl(KernelImpl(
+    name="pallas_db",
+    description="Pallas kernel with DMA/compute overlap (double buffering)",
+    make=_make_pallas_db,
+    supports=lambda st, steps: True,
+    vmem_slots=2,
+))
+register_kernel_impl(KernelImpl(
+    name="mxu",
+    description="banded-matmul MXU recast (linear stencils, high radius)",
+    make=_make_mxu,
+    supports=lambda st, steps: st.is_linear,
+    default_tile=MXU_TILE,
+))
+
+
+def _auto_impl(st: Stencil, backend: str) -> str:
+    if backend == "tpu":
+        from repro.kernels.stencil_banded_mxu import mxu_wins
+
+        return "mxu" if (st.is_linear and mxu_wins(st)) else "pallas_db"
+    # off-TPU (this container, CI) the XLA-fused jnp path beats
+    # interpret-mode Pallas by orders of magnitude
+    return "reference"
+
+
+@functools.lru_cache(maxsize=64)
+def _resolved_impl(name: str, policy: DispatchPolicy) -> FusedStep:
+    """Memoized ``impl.make(policy)``: the same (impl, policy) always
+    resolves to the *same callable object*, so the lowering layer's
+    signature cache (keyed on the callable's identity) keeps hitting
+    across repeated ``lower()`` calls."""
+    return KERNEL_IMPLS[name].make(policy)
+
+
+def select_kernel(
+    stencil, steps: int, policy: Optional[DispatchPolicy] = None,
+) -> Tuple[str, FusedStep]:
+    """Resolve ``(stencil, steps, policy)`` to ``(impl_name, fused_step)``.
+
+    ``policy.impl == "auto"`` picks per backend: MXU recast when
+    ``mxu_wins``, the DMA-overlapped Pallas kernel otherwise on TPU, and
+    the reference jnp path everywhere else.  An explicit impl name is
+    validated against the stencil (e.g. ``mxu`` rejects nonlinear
+    stencils at dispatch time, not inside the kernel)."""
+    st = get_stencil(stencil) if isinstance(stencil, str) else stencil
+    policy = policy or DispatchPolicy()
+    backend = policy.backend or jax.default_backend()
+    name = policy.impl
+    if name == "auto":
+        name = _auto_impl(st, backend)
+    try:
+        impl = KERNEL_IMPLS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel impl {name!r}; known: {sorted(KERNEL_IMPLS)}")
+    if not impl.supports(st, steps):
+        raise ValueError(
+            f"kernel impl {name!r} does not support stencil {st.name!r} "
+            f"(steps={steps})")
+    return name, _resolved_impl(name, policy)
+
+
+# --------------------------------------------------------------- modeling
+
+
+def _clamped_tile(impl: KernelImpl, tile, h_out: int, X: int) -> Tuple[int, int]:
+    ty, tx = tile or impl.default_tile
+    return min(ty, h_out), min(tx, X)
+
+
+def modeled_kernel_time(plan, hw, impl_name: str,
+                        tile: Optional[Tuple[int, int]] = None):
+    """Sec. III kernel term specialised per implementation.
+
+    Walks the plan's FusedKernel ops and returns
+    ``(kernel_s, mem_s, compute_s)`` — or ``None`` when the
+    implementation is infeasible for this plan (unsupported stencil, or
+    the apron'd tile set does not fit VMEM on hardware that models a
+    VMEM capacity).
+
+    Per-impl terms:
+
+    * ``reference`` — no on-chip reuse across fused steps: every step
+      streams the band through HBM once (read + write), so the memory
+      term multiplies by the step count; compute on the VPU.
+    * ``pallas`` — one band read (inflated by the tile-apron overlap
+      factor) + one write per fused call; DMA and compute serialise in
+      the single-buffered kernel (``mem + compute``).
+    * ``pallas_db`` — same traffic, DMA hidden under compute
+      (``max(mem, compute)``).
+    * ``mxu`` — traffic like ``pallas``; compute recast as
+      ``(2r+1)`` banded matmuls of ``2*(TX+2r)`` MXU-flops per element.
+    """
+    try:
+        impl = KERNEL_IMPLS[impl_name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel impl {impl_name!r}; known: {sorted(KERNEL_IMPLS)}")
+    mem_bytes = 0.0
+    vpu_flops = 0.0
+    mxu_flops = 0.0
+    itemsize = plan.itemsize
+    for op in plan.ops:
+        if type(op).__name__ != "FusedKernel":
+            continue
+        st = get_stencil(op.stencil)
+        if not impl.supports(st, op.steps):
+            return None
+        r, m = st.radius, op.steps
+        vpu_flops += op.flops
+        if impl_name == "reference":
+            # per-step band read + write: heights shrink r/step per
+            # non-frame side, mirroring fused_kernel_geometry
+            keep = (int(op.keep_top) + int(op.keep_bottom)) * r
+            h = op.h_in
+            for _ in range(m):
+                h_next = h - 2 * r + keep
+                mem_bytes += (h + h_next) * op.width * itemsize
+                h = h_next
+        else:
+            ty, tx = _clamped_tile(impl, tile, op.h_out, op.width)
+            if ty <= 0 or tx <= 0:
+                return None
+            apron_bytes = (ty + 2 * m * r) * (tx + 2 * m * r) * itemsize
+            c_vmem = getattr(hw, "c_vmem", 0)
+            if c_vmem and apron_bytes * impl.vmem_slots > c_vmem:
+                return None
+            n_tiles = ceil_div(op.h_out, ty) * ceil_div(op.width, tx)
+            # reads: one apron'd tile per output tile; writes: exact band
+            mem_bytes += n_tiles * apron_bytes + op.h_out * op.width * itemsize
+            if impl_name == "mxu":
+                n = 2 * r + 1
+                mxu_flops += op.elements * n * 2 * (tx + 2 * r)
+    if impl_name == "mxu":
+        compute_s = mxu_flops / hw.peak_mxu_flops
+    else:
+        compute_s = vpu_flops / hw.peak_vpu_flops
+    mem_s = mem_bytes / hw.bw_dmem
+    if impl_name in ("reference", "pallas_db"):
+        kernel_s = max(mem_s, compute_s)     # XLA / double-buffered overlap
+    else:
+        kernel_s = mem_s + compute_s         # single-buffered: DMA then compute
+    return kernel_s, mem_s, compute_s

@@ -27,11 +27,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.reference import multi_step_band
 from repro.core.stencil import Stencil, get_stencil
+from repro.kernels import MXU_TILE, ceil_div
 
 __all__ = ["banded_fused_stencil", "mxu_wins"]
 
-DEFAULT_TILE = (256, 128)  # lane dim 128 = MXU-native
+DEFAULT_TILE = MXU_TILE  # lane dim 128 = MXU-native
 
 
 def mxu_wins(st: Stencil, tx: int = 128,
@@ -101,10 +103,6 @@ def _kernel(x_hbm, bands_ref, o_ref, tile, sem, *, st, steps, keep_top,
     o_ref[...] = out
 
 
-def _ceil_div(a, b):
-    return -(-a // b)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("name", "steps", "keep_top", "keep_bottom", "tile", "interpret"),
@@ -131,11 +129,9 @@ def banded_fused_stencil(
     ty = min(tile[0], h_out)
     tx = min(tile[1], X)
     if H < ty + 2 * m * r or X < tx + 2 * m * r:
-        from repro.core.reference import multi_step_band
-
         return multi_step_band(band, name, steps, keep_top, keep_bottom)
 
-    grid = (_ceil_div(h_out, ty), _ceil_div(X, tx))
+    grid = (ceil_div(h_out, ty), ceil_div(X, tx))
     hp_out, xp_out = grid[0] * ty, grid[1] * tx
     pad_y, pad_x = hp_out - h_out, xp_out - X
     Hp, Xp = H + pad_y, X + pad_x

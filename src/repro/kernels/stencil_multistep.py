@@ -30,11 +30,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.reference import multi_step_band
 from repro.core.stencil import Stencil, get_stencil
+from repro.kernels import DEFAULT_TILE, ceil_div
 
 __all__ = ["fused_stencil_band", "DEFAULT_TILE"]
-
-DEFAULT_TILE = (256, 512)
 
 
 def _kernel(
@@ -89,10 +89,6 @@ def _kernel(
     o_ref[...] = out
 
 
-def _ceil_div(a: int, b: int) -> int:
-    return -(-a // b)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("name", "steps", "keep_top", "keep_bottom", "tile", "interpret"),
@@ -123,12 +119,10 @@ def fused_stencil_band(
     tx = min(tile[1], X)
     if H < ty + 2 * m * r or X < tx + 2 * m * r:
         # band smaller than one apron'd tile — tiny-shape fallback
-        from repro.core.reference import multi_step_band
-
         return multi_step_band(band, name, steps, keep_top, keep_bottom)
 
     # pad band so every output tile lies fully inside the padded band
-    grid = (_ceil_div(h_out, ty), _ceil_div(X, tx))
+    grid = (ceil_div(h_out, ty), ceil_div(X, tx))
     hp_out = grid[0] * ty
     xp_out = grid[1] * tx
     pad_y = hp_out - h_out

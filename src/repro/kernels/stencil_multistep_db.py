@@ -20,11 +20,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.reference import multi_step_band
 from repro.core.stencil import Stencil, get_stencil
+from repro.kernels import DEFAULT_TILE, ceil_div
 
 __all__ = ["fused_stencil_band_db"]
-
-DEFAULT_TILE = (256, 512)
 
 
 def _kernel(x_hbm, o_ref, tiles, sems, *, st: Stencil, steps: int,
@@ -83,10 +83,6 @@ def _kernel(x_hbm, o_ref, tiles, sems, *, st: Stencil, steps: int,
     o_ref[...] = jax.lax.dynamic_slice(t, (oy - sy, ox - sx), (TY, TX))
 
 
-def _ceil_div(a, b):
-    return -(-a // b)
-
-
 @functools.partial(
     jax.jit,
     static_argnames=("name", "steps", "keep_top", "keep_bottom", "tile", "interpret"),
@@ -109,11 +105,9 @@ def fused_stencil_band_db(
     ty = min(tile[0], h_out)
     tx = min(tile[1], X)
     if H < ty + 2 * m * r or X < tx + 2 * m * r:
-        from repro.core.reference import multi_step_band
-
         return multi_step_band(band, name, steps, keep_top, keep_bottom)
 
-    ny, nx = _ceil_div(h_out, ty), _ceil_div(X, tx)
+    ny, nx = ceil_div(h_out, ty), ceil_div(X, tx)
     hp_out, xp_out = ny * ty, nx * tx
     pad_y, pad_x = hp_out - h_out, xp_out - X
     Hp, Xp = H + pad_y, X + pad_x
