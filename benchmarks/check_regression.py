@@ -8,8 +8,9 @@ against the committed ``benchmarks/baselines.json``:
 
 * a baseline key missing from the current run is an error (coverage
   regressed — an engine/codec stopped compiling);
-* ``wire_bytes`` above baseline by more than ``--tolerance`` (relative)
-  is an error (a planner or codec change made transfers fatter);
+* ``wire_bytes`` (and, for the sharded L2 records, ``ici_bytes``) above
+  baseline by more than ``--tolerance`` (relative) is an error (a
+  planner or codec change made transfers fatter);
 * the deterministic op-count/cache metrics (``plan_ops``,
   ``stage_count``, ``shape_buckets`` — the kernel-compile ceiling of the
   lowered plan) must match the baseline *exactly*: they are integers
@@ -35,9 +36,14 @@ from pathlib import Path
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baselines.json"
 
-GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes")
-# integer plan/lowering metrics: exact match, no tolerance
-EXACT_FIELDS = ("plan_ops", "stage_count", "shape_buckets")
+GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes", "ici_bytes")
+# integer plan/lowering metrics: exact match, no tolerance.  The sharded
+# (L2) records add the plan-derived per-round collective bytes and the
+# ghost-wedge redundancy — deterministic functions of the schedule, so
+# any drift is a real planner change that deserves a baseline refresh.
+EXACT_FIELDS = ("plan_ops", "stage_count", "shape_buckets",
+                "collective_bytes_per_round", "redundant_elements",
+                "halo_ops")
 
 
 def check(current: dict, baseline: dict, tolerance: float):

@@ -66,6 +66,44 @@ def _write_json(records, json_path) -> None:
     print(f"# wrote {len(records)} records to {json_path}", file=sys.stderr)
 
 
+# sharded (L2) dry-run workload: the full 38400^2 framed domain over a
+# 4x2 chip mesh, k_ici sweeping the per-step-exchange baseline (k=1)
+# against communication-avoiding depths
+SHARD_MESH = (4, 2)
+SHARD_K_ICI = (1, 4, 8)
+
+
+def _sharded_records(ex, records) -> None:
+    from repro.core.shard import compile_sharded
+    from repro.core.stencil import PAPER_BENCHMARKS
+
+    from .common import N_STEPS, OOC_SZ
+
+    for name in PAPER_BENCHMARKS:
+        for k_ici in SHARD_K_ICI:
+            plan = compile_sharded(name, OOC_SZ, OOC_SZ, N_STEPS, k_ici,
+                                   SHARD_MESH)
+            _, s = ex.execute(plan)
+            key = (f"sharded/{name}/mesh{SHARD_MESH[0]}x{SHARD_MESH[1]}"
+                   f"/k{k_ici}")
+            print(f"dryrun/{key},{len(plan)},"
+                  f"ici_gb={s.ici_bytes / 1e9:.2f} "
+                  f"per_round_mb={plan.collective_bytes_per_round / 1e6:.2f} "
+                  f"halo_ops={s.halo_ops} "
+                  f"kernels={s.kernel_calls} "
+                  f"redundancy={s.redundancy:.6f}")
+            records[key] = {
+                "plan_ops": len(plan),
+                "raw_bytes": s.transfer_bytes,
+                "ici_bytes": s.ici_bytes,
+                "collective_bytes_per_round": plan.collective_bytes_per_round,
+                "halo_ops": s.halo_ops,
+                "kernel_calls": s.kernel_calls,
+                "redundant_elements": s.redundant_elements,
+                "stage_count": len(plan.barriers),
+            }
+
+
 def dry_run(engines, codecs, json_path=None) -> None:
     from repro.core.compress import compress_plan
     from repro.core.executor import DryRunExecutor
@@ -108,6 +146,9 @@ def dry_run(engines, codecs, json_path=None) -> None:
                     "stage_count": lowering["stage_count"],
                     "shape_buckets": lowering["shape_buckets"],
                 }
+    # multi-chip (L2) sharded plans: ICI + ghost-wedge accounting, gated
+    # by check_regression.py next to the single-device byte records
+    _sharded_records(ex, records)
     if json_path:
         _write_json(records, json_path)
 
@@ -174,7 +215,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from repro.core.compress import CODECS
-    from repro.core.executor import EXECUTORS
+    from repro.core.executor import PLAN_EXECUTORS
     from repro.core.oocore import ENGINES
     from repro.kernels.dispatch import KERNEL_IMPLS
 
@@ -187,9 +228,11 @@ def main(argv=None) -> None:
         dry_run(engines, codecs, json_path=args.json)
         return
     if args.exec_bench:
-        if args.executor not in EXECUTORS or args.executor == "dry_run":
+        # the sharded executors interpret ShardedPlans, not the
+        # single-device engine schedules --exec sweeps
+        if args.executor not in PLAN_EXECUTORS:
             ap.error(f"unknown --executor {args.executor!r}; known: "
-                     f"{sorted(set(EXECUTORS) - {'dry_run'})}")
+                     f"{sorted(PLAN_EXECUTORS)}")
         if args.fused_step != "auto" and args.fused_step not in KERNEL_IMPLS:
             ap.error(f"unknown --fused-step {args.fused_step!r}; known: "
                      f"{sorted(KERNEL_IMPLS)} (or 'auto')")

@@ -4,14 +4,19 @@ Engine planners (oocore) compile to transfer/kernel op schedules (plan),
 lowered to slot-bound stage programs with a shape-bucketed kernel cache
 (lower), interpreted by pluggable executors (executor: eager /
 double-buffered / dry-run).  Oracle (reference), stencil registry, chunk algebra (tiling),
-Sec. III/IV-C models (analytic/params), plan-derived stats (accounting),
-and the L2 distributed engine (distributed).
+Sec. III/IV-C models (analytic/params), plan-derived stats (accounting).
+The L2 sharded planner (shard) compiles per-device op streams with
+halo-exchange ops, executed by the single-device lockstep simulator or
+the shard_map/ppermute backend (distributed).
 """
 from .analytic import EngineTimes, Hardware, RTX3080_PAPER, TPU_V5E, model_times, times_from_plan  # noqa: F401
 from .compress import CODECS, Codec, compress_plan, get_codec, register_codec  # noqa: F401
 from .executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor, get_executor  # noqa: F401
-from .lower import CompiledPlan, ExecStats, KernelCache, lower  # noqa: F401
+from .executor import ShardMapExecutor, ShardedSimExecutor  # noqa: F401
+from .lower import CompiledPlan, CompiledShardedPlan, ExecStats, KernelCache, lower, lower_sharded  # noqa: F401
 from .oocore import InCore, NaiveTB, ResReu, SO2DR, TransferStats, compile_plan, get_engine  # noqa: F401
 from .plan import BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan, FusedKernel, H2D, HostCommit  # noqa: F401
+from .plan import DeviceShard, HaloRecv, HaloSend, ShardKernel, ShardLoad, ShardStore, ShardedPlan  # noqa: F401
 from .reference import multi_step_band, run_reference, step_band, step_domain  # noqa: F401
+from .shard import compile_sharded, ghost_wedge_elements  # noqa: F401
 from .stencil import PAPER_BENCHMARKS, REGISTRY, Stencil, get_stencil  # noqa: F401

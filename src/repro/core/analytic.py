@@ -33,6 +33,7 @@ class Hardware:
     bw_ici: float = 0.0   # per-link inter-chip interconnect, bytes/s
     n_streams: int = 3    # paper fixes N_strm = 3 (double buffering + compute)
     c_vmem: int = 0       # on-chip scratch (VMEM/shared mem), bytes; 0 = unmodeled
+    t_ici_latency: float = 0.0  # per collective phase launch overhead, s
 
 
 # The paper's experimental machine (Table II) — used to sanity-check the
@@ -56,6 +57,7 @@ TPU_V5E = Hardware(
     peak_mxu_flops=197.0e12,  # bf16 MXU peak (assignment constant)
     bw_ici=50.0e9,           # per ICI link (assignment constant)
     c_vmem=128 * 1024**2,    # v5e VMEM per core
+    t_ici_latency=1e-5,      # collective launch overhead per exchange phase
 )
 
 

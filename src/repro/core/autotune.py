@@ -22,7 +22,7 @@ are pointless and it says so.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional
+from typing import Iterable, List, Optional, Tuple
 
 from .analytic import EngineTimes, Hardware, model_times
 from .compress import compress_plan
@@ -31,7 +31,8 @@ from .oocore import compile_plan
 from .params import CodeSpec, feasible
 from .stencil import Stencil
 
-__all__ = ["Choice", "autotune", "optimization_target"]
+__all__ = ["Choice", "autotune", "optimization_target",
+           "ShardedChoice", "autotune_sharded"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +143,92 @@ def autotune(
                                 times=t,
                                 kernel_impl=impl, tile=tile,
                             ))
+    out.sort(key=lambda c: c.time_s)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedChoice:
+    """One ranked L2 configuration: mesh decomposition + halo depth."""
+
+    mesh: Tuple[int, int]
+    k_ici: int
+    time_s: float
+    bottleneck: str          # "ici" | "kernel"
+    ici_s: float
+    kernel_s: float
+    ici_bytes: int           # total send-side ICI payload
+    redundancy: float        # plan-derived ghost-wedge overhead
+
+    @property
+    def config(self):
+        return dict(mesh=self.mesh, k_ici=self.k_ici)
+
+
+def autotune_sharded(
+    st: Stencil,
+    Y: int,
+    n_steps: int,
+    hw: Hardware,
+    n_devices: int = 8,
+    k_ici_grid: Iterable[int] = (1, 2, 4, 8),
+    b_elem: int = 4,
+) -> List[ShardedChoice]:
+    """Rank mesh decomposition x ``k_ici`` for the L2 sharded engine
+    (best first) — the inter-chip companion of :func:`autotune`.
+
+    Every factorization of ``n_devices`` into a ``(rows, cols)`` mesh is
+    swept against the ``k_ici`` grid; each candidate compiles its full
+    :class:`~repro.core.plan.ShardedPlan` (infeasible geometry —
+    indivisible domain, halo deeper than a shard, ``n % k_ici`` — is
+    skipped exactly like the L1 sweep skips infeasible ``k_off``) and is
+    costed from the plan-derived stats alone:
+
+    * ICI time charges the max per-rank send bytes per round at
+      ``bw_ici`` plus ``t_ici_latency`` per collective phase (two per
+      round on a 2-D mesh) — the latency term is what makes the paper's
+      trade visible: larger ``k_ici`` buys ``1/k`` fewer exchange
+      phases for a near-constant per-step byte cost;
+    * kernel time is the per-rank roofline over the max rank (ghost
+      wedges included), so deeper halos pay their redundant compute.
+
+    The two phases do not overlap in the exchange-then-compute schedule,
+    so the total is their sum.  The per-device schedule knobs
+    ``(d, S_TB, k_on, codec)`` stay orthogonal: compose this sweep with
+    :func:`autotune` to pick the on-device plan each rank runs.
+
+    ``Y`` is the *global framed* domain side (the sharded planner takes
+    the full shape directly — mesh divisibility is part of feasibility).
+    """
+    from .shard import compile_sharded
+
+    if hw.bw_ici <= 0:
+        raise ValueError(f"hardware {hw.name!r} has no modeled ICI bandwidth")
+    out: List[ShardedChoice] = []
+    for n_row in range(1, n_devices + 1):
+        if n_devices % n_row:
+            continue
+        mesh = (n_row, n_devices // n_row)
+        for k_ici in k_ici_grid:
+            try:
+                plan = compile_sharded(st.name, Y, Y, n_steps, k_ici, mesh,
+                                       itemsize=b_elem)
+            except ValueError:
+                continue
+            _, stats = DryRunExecutor().execute(plan)
+            phases = (mesh[0] > 1) + (mesh[1] > 1)   # row + col exchanges
+            ici_s = plan.rounds * (
+                phases * hw.t_ici_latency
+                + plan.collective_bytes_per_round / hw.bw_ici)
+            per = [plan.per_rank_stats(r) for r in range(plan.n_ranks)]
+            k_mem = max(p.kernel_hbm_bytes for p in per) / hw.bw_dmem
+            k_cmp = max(p.flops for p in per) / hw.peak_vpu_flops
+            kernel_s = max(k_mem, k_cmp)
+            out.append(ShardedChoice(
+                mesh=mesh, k_ici=k_ici, time_s=ici_s + kernel_s,
+                bottleneck="ici" if ici_s >= kernel_s else "kernel",
+                ici_s=ici_s, kernel_s=kernel_s,
+                ici_bytes=stats.ici_bytes, redundancy=stats.redundancy))
     out.sort(key=lambda c: c.time_s)
     return out
 

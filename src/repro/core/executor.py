@@ -12,7 +12,17 @@ Three interpreters of the same op schedule:
   (Sec. II, N_strm = 3), previously impossible with inline engine loops.
 * :class:`DryRunExecutor` — walks no device work at all and returns the
   plan-derived :class:`TransferStats`; the autotuner costs the whole
-  configuration sweep with it.
+  configuration sweep with it.  It also costs multi-device
+  :class:`~repro.core.plan.ShardedPlan` schedules with zero devices.
+
+Sharded plans (:mod:`repro.core.shard`) add two more:
+
+* :class:`ShardedSimExecutor` — lowers the per-rank op streams to
+  lockstep stage programs (:func:`repro.core.lower.lower_sharded`) and
+  runs them on a single device, halos moving through a mailbox; the
+  differential counterpart of the shard_map oracle.
+* :class:`ShardMapExecutor` — dispatches the plan to the real
+  ``shard_map``/``ppermute`` backend in :mod:`repro.core.distributed`.
 
 The device executors run plans through the lowering layer by default
 (:func:`repro.core.lower.lower`): ops become per-(round, chunk) stage
@@ -38,15 +48,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compress import get_codec
-from .lower import ExecStats, KernelCache, lower, validate_domain
+from .lower import ExecStats, KernelCache, lower, lower_sharded, validate_domain
 from .plan import (
     BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
-    FusedKernel, H2D, HostCommit, TransferStats,
+    FusedKernel, H2D, HostCommit, ShardedPlan, TransferStats,
 )
 from .reference import multi_step_band
 
 __all__ = [
     "EagerExecutor", "DoubleBufferedExecutor", "DryRunExecutor",
+    "ShardedSimExecutor", "ShardMapExecutor",
     "get_executor", "EXECUTORS",
 ]
 
@@ -290,17 +301,99 @@ class DryRunExecutor:
     Used by :mod:`repro.core.autotune` to cost the full configuration
     sweep and by ``benchmarks/run.py --dry-run`` to exercise plan
     construction for every engine without allocating a single device
-    array."""
+    array.  Accepts both single-device :class:`ExecutionPlan` and
+    multi-device :class:`~repro.core.plan.ShardedPlan` schedules — in
+    both cases the accounting is a property of the plan, so a sharded
+    plan's ICI/wedge costs are known with zero devices."""
 
     name = "dry_run"
 
-    def execute(self, plan: ExecutionPlan,
+    def execute(self, plan,
                 x: Optional[np.ndarray] = None) -> Tuple[None, TransferStats]:
         return None, plan.stats()
 
 
+class ShardedSimExecutor:
+    """Single-device lockstep simulator for sharded plans.
+
+    Lowers the per-rank op streams through
+    :func:`repro.core.lower.lower_sharded` (slot-bound closures, shared
+    halo mailbox, one cached kernel signature for every rank x round)
+    and walks the global phases in barrier order.  Differentially tested
+    against the ``shard_map`` oracle: results match
+    :func:`repro.core.distributed.run_distributed` to float tolerance
+    with zero real devices, which is what lets CI exercise multi-chip
+    schedules on a CPU container."""
+
+    name = "sharded_sim"
+
+    def __init__(self):
+        self.kernel_cache = KernelCache()
+        self.exec_stats: Optional[ExecStats] = None
+        self._lowered_memo = None
+
+    def _compiled(self, plan: ShardedPlan):
+        memo = self._lowered_memo
+        if memo is not None and memo[0] is plan:
+            return memo[1]
+        compiled = lower_sharded(plan, kernel_cache=self.kernel_cache)
+        self._lowered_memo = (plan, compiled)
+        return compiled
+
+    def execute(self, plan: ShardedPlan,
+                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
+        host, stats, exec_stats = self._compiled(plan).execute(x)
+        exec_stats.executor = self.name
+        self.exec_stats = exec_stats
+        return host, stats
+
+
+class ShardMapExecutor:
+    """Multi-device backend: run a sharded plan through the
+    ``shard_map``/``ppermute`` program in :mod:`repro.core.distributed`.
+
+    The plan carries the whole geometry (mesh shape, k_ici, stencil, n),
+    so ``execute(plan, x)`` needs no configuration beyond an optional
+    explicit mesh — by default a ``plan.mesh_shape`` mesh is built from
+    the visible devices.  Stats are the plan-derived accounting, same as
+    every other executor."""
+
+    name = "shard_map"
+
+    def __init__(self, mesh=None, row_axis: str = "data",
+                 col_axis: str = "model"):
+        self.mesh = mesh
+        self.row_axis = row_axis
+        self.col_axis = col_axis
+        self.exec_stats: Optional[ExecStats] = None
+
+    def execute(self, plan: ShardedPlan,
+                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
+        import time
+
+        from .distributed import execute_sharded_plan
+
+        t0 = time.perf_counter()
+        out = np.asarray(execute_sharded_plan(plan, x, mesh=self.mesh,
+                                              row_axis=self.row_axis,
+                                              col_axis=self.col_axis))
+        # the backend runs one fused shard_map program, not per-op
+        # closures: no per-op wall clock or cache counters to report
+        self.exec_stats = ExecStats(
+            executor=self.name, kernel_impl="shard_map",
+            kernel_calls=plan.n_ranks * plan.rounds,
+            stage_count=len(plan.barriers),
+            wall_s=time.perf_counter() - t0)
+        return out, plan.stats()
+
+
 EXECUTORS = {e.name: e for e in
-             (EagerExecutor, DoubleBufferedExecutor, DryRunExecutor)}
+             (EagerExecutor, DoubleBufferedExecutor, DryRunExecutor,
+              ShardedSimExecutor, ShardMapExecutor)}
+
+# executors that interpret single-device ExecutionPlans (what
+# benchmarks.run --exec sweeps); the sharded ones take a ShardedPlan
+PLAN_EXECUTORS = ("eager", "double_buffered")
 
 
 def get_executor(name: str, fused_step: Optional[FusedStep] = None,
@@ -309,6 +402,10 @@ def get_executor(name: str, fused_step: Optional[FusedStep] = None,
         cls = EXECUTORS[name]
     except KeyError:
         raise KeyError(f"unknown executor {name!r}; known: {sorted(EXECUTORS)}")
-    if cls is DryRunExecutor:
+    if cls in (DryRunExecutor, ShardedSimExecutor, ShardMapExecutor):
+        if fused_step is not None or policy is not None:
+            raise ValueError(
+                f"executor {name!r} takes no fused_step/policy — it never "
+                "dispatches single-device FusedKernel ops")
         return cls()
     return cls(fused_step, policy=policy)

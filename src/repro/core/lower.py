@@ -49,17 +49,20 @@ import numpy as np
 from .compress import get_codec
 from .plan import (
     BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
-    FusedKernel, H2D, HostCommit, TransferStats,
+    FusedKernel, H2D, HaloRecv, HaloSend, HostCommit, ShardKernel,
+    ShardLoad, ShardStore, ShardedPlan, TransferStats,
 )
 
 __all__ = [
     "ExecStats", "KernelCache", "CompiledPlan", "LoweredStage", "lower",
-    "validate_domain",
+    "CompiledShardedPlan", "ShardStage", "lower_sharded",
+    "check_domain", "validate_domain",
 ]
 
 # op-class tags (indices into the per-class wall-clock accumulators)
 OP_TAGS = ("H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel",
-           "HostCommit", "Compress", "Decompress")
+           "HostCommit", "Compress", "Decompress",
+           "ShardLoad", "ShardStore", "HaloSend", "HaloRecv", "ShardKernel")
 _TAG = {name: i for i, name in enumerate(OP_TAGS)}
 
 BoundOp = Tuple[int, Callable]          # (tag, closure over the runtime)
@@ -167,14 +170,23 @@ class LoweredStage:
     rest: Tuple[BoundOp, ...]
 
 
-def validate_domain(plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
-    """Check a host domain against the plan geometry; return a mutable copy."""
+def check_domain(plan, x: np.ndarray) -> None:
+    """Raise if a host domain does not match the plan geometry.
+
+    Shared by every executor entry point (including the shard_map
+    backend, which needs no mutable copy), so all backends reject
+    identically by construction."""
     if x.shape != (plan.Y, plan.X):
         raise ValueError(f"domain {x.shape} does not match plan "
                          f"({plan.Y}, {plan.X})")
     if x.dtype.itemsize != plan.itemsize:
         raise ValueError(f"dtype itemsize {x.dtype.itemsize} does not match "
                          f"plan itemsize {plan.itemsize}")
+
+
+def validate_domain(plan: ExecutionPlan, x: np.ndarray) -> np.ndarray:
+    """Check a host domain against the plan geometry; return a mutable copy."""
+    check_domain(plan, x)
     return np.asarray(x).copy()
 
 
@@ -523,6 +535,225 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
         n_reg_slots=regs.n_slots,
         n_buf_slots=bufs.n_slots,
         kernel_impl="+".join(impl_names) if impl_names else "none",
+        shape_buckets=len(signatures),
+        cache=cache,
+        lower_s=time.perf_counter() - t0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Sharded-plan lowering: per-rank streams -> global phase-ordered stage
+# programs, executed in lockstep on a single device (the simulator behind
+# repro.core.executor.ShardedSimExecutor).  Reuses the slot binder for
+# rank bands and the KernelCache for the masked shard kernel — shards are
+# uniform, so every rank and round shares ONE compiled signature (the
+# per-rank global origin is a traced argument, not a static one).
+# --------------------------------------------------------------------------
+
+
+class _ShardRuntime:
+    """Slot-indexed per-rank band state + the halo mailbox the bound
+    closures run against.  ``mail`` is keyed ``(src, dst, axis, round)``
+    — unique per exchange because each ordered rank pair swaps at most
+    one payload per axis per round."""
+
+    __slots__ = ("host", "bands", "mail", "staged")
+
+    def __init__(self, host: np.ndarray, n_slots: int):
+        self.host = host
+        self.bands: List = [None] * n_slots
+        self.mail: Dict[tuple, jnp.ndarray] = {}
+        self.staged: List[tuple] = []
+
+    def commit(self) -> None:
+        for _, _, _, _, rows in self.staged:
+            jax.block_until_ready(rows)
+        for y0, y1, x0, x1, rows in self.staged:
+            self.host[y0:y1, x0:x1] = np.asarray(rows)
+        self.staged.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStage:
+    """One global phase: every rank's bound ops, rank order.  Phase
+    boundaries are the plan's barrier structure — an executor must drain
+    a stage before starting the next (sends and recvs never share one)."""
+
+    label: str
+    ops: Tuple[BoundOp, ...]
+
+
+def _bind_shard_kernel(slot: int, op: ShardKernel, plan: ShardedPlan,
+                       cache: KernelCache) -> Callable:
+    from .distributed import masked_local_steps
+    from .stencil import get_stencil
+
+    st = get_stencil(op.stencil)
+    hk = op.steps * st.radius
+    # one signature per (stencil, steps, band shape, domain): gy0/gx0 are
+    # traced, so all ranks and rounds hit the same compiled kernel
+    key = ("shard", op.stencil, op.steps, op.h, op.w, plan.Y, plan.X,
+           plan.itemsize)
+    gy0, gx0 = op.gy0, op.gx0
+
+    def make() -> Callable:
+        def f(ext, y0, x0):
+            out = masked_local_steps(ext, st, op.steps, y0, x0,
+                                     plan.Y, plan.X)
+            return out[hk:-hk, hk:-hk] if hk else out
+        return jax.jit(f)
+
+    def run(rt):
+        fn = cache.lookup(key, make)
+        rt.bands[slot] = fn(rt.bands[slot], gy0, gx0)
+
+    return run
+
+
+@dataclasses.dataclass
+class CompiledShardedPlan:
+    """A lowered :class:`~repro.core.plan.ShardedPlan`: phase-ordered
+    stage programs of slot-bound closures over a shared halo mailbox."""
+
+    plan: ShardedPlan
+    stages: Tuple[ShardStage, ...]
+    n_slots: int
+    shape_buckets: int
+    cache: KernelCache
+    lower_s: float
+
+    def describe(self) -> dict:
+        return {
+            "stage_count": len(self.stages),
+            "shape_buckets": self.shape_buckets,
+            "kernel_impl": "shard_sim",
+            "reg_slots": self.n_slots,
+            "buf_slots": 0,
+        }
+
+    def execute(self, x: np.ndarray,
+                ) -> Tuple[np.ndarray, TransferStats, ExecStats]:
+        """Run every phase in barrier order (all ranks lockstep).  The
+        result matches the shard_map backend to float tolerance — same
+        masked-update math via :func:`repro.core.distributed
+        .masked_local_steps` — and the returned stats are the
+        plan-derived accounting, untouched by execution."""
+        rt = _ShardRuntime(validate_domain(self.plan, x), self.n_slots)
+        wall = [0.0] * len(OP_TAGS)
+        counts = [0] * len(OP_TAGS)
+        hits0, miss0 = self.cache.hits, self.cache.misses
+        perf = time.perf_counter
+        t_run = perf()
+        for stage in self.stages:
+            for tag, fn in stage.ops:
+                t0 = perf()
+                fn(rt)
+                wall[tag] += perf() - t0
+                counts[tag] += 1
+        rt.commit()
+        stats = ExecStats(
+            kernel_impl="shard_sim",
+            op_counts={OP_TAGS[i]: c for i, c in enumerate(counts) if c},
+            op_wall_s={OP_TAGS[i]: wall[i] for i, c in enumerate(counts) if c},
+            kernel_calls=counts[_TAG["ShardKernel"]],
+            shape_buckets=self.shape_buckets,
+            kernel_compiles=self.cache.misses - miss0,
+            kernel_cache_hits=self.cache.hits - hits0,
+            stage_count=len(self.stages),
+            lower_s=self.lower_s,
+            wall_s=perf() - t_run,
+        )
+        return rt.host, self.plan.stats(), stats
+
+
+def lower_sharded(plan: ShardedPlan,
+                  kernel_cache: Optional[KernelCache] = None,
+                  ) -> CompiledShardedPlan:
+    """Compile a sharded plan's per-rank streams into global stage
+    programs.
+
+    Each rank's evolving band (own -> row-extended -> fully-extended ->
+    cropped own) binds to one slot via the same :class:`_SlotAllocator`
+    the single-device lowering uses; halo ops become mailbox closures;
+    :class:`~repro.core.plan.ShardKernel` ops dispatch through the keyed
+    :class:`KernelCache` — uniform shards mean exactly one kernel
+    signature for the whole plan (``shape_buckets == 1``)."""
+    t0 = time.perf_counter()
+    cache = kernel_cache if kernel_cache is not None else KernelCache()
+    regs = _SlotAllocator()
+    signatures = set()
+    stages: List[ShardStage] = []
+
+    for ordinal, (label, ops) in enumerate(plan.phases()):
+        regs.new_stage(ordinal)
+        bound: List[BoundOp] = []
+        for op in ops:
+            if isinstance(op, ShardLoad):
+                slot = regs.alloc(f"band:{op.rank}")
+                y0, y1, x0, x1 = op.y0, op.y1, op.x0, op.x1
+
+                def run(rt, _s=slot, _y0=y0, _y1=y1, _x0=x0, _x1=x1):
+                    rt.bands[_s] = jnp.asarray(rt.host[_y0:_y1, _x0:_x1])
+
+                bound.append((_TAG["ShardLoad"], run))
+            elif isinstance(op, HaloSend):
+                slot = regs.get(f"band:{op.rank}")
+                mkey = (op.rank, op.dst, op.axis, op.round)
+                axis, side, depth = op.axis, op.side, op.depth
+
+                def run(rt, _s=slot, _k=mkey, _a=axis, _e=side, _d=depth):
+                    band = rt.bands[_s]
+                    if _a == 0:
+                        payload = band[-_d:] if _e == "hi" else band[:_d]
+                    else:
+                        payload = band[:, -_d:] if _e == "hi" else band[:, :_d]
+                    rt.mail[_k] = payload
+
+                bound.append((_TAG["HaloSend"], run))
+            elif isinstance(op, HaloRecv):
+                slot = regs.get(f"band:{op.rank}")
+                mkey = (op.src, op.rank, op.axis, op.round)
+                axis, side, depth, src = op.axis, op.side, op.depth, op.src
+
+                def run(rt, _s=slot, _k=mkey, _a=axis, _e=side, _d=depth,
+                        _src=src):
+                    band = rt.bands[_s]
+                    if _src < 0:
+                        # mesh edge: zero fill, exactly what ppermute
+                        # leaves for non-receivers (masked, never read
+                        # by valid cells)
+                        shape = ((_d, band.shape[1]) if _a == 0
+                                 else (band.shape[0], _d))
+                        payload = jnp.zeros(shape, band.dtype)
+                    else:
+                        payload = rt.mail.pop(_k)
+                    pair = [payload, band] if _e == "lo" else [band, payload]
+                    rt.bands[_s] = jnp.concatenate(pair, axis=_a)
+
+                bound.append((_TAG["HaloRecv"], run))
+            elif isinstance(op, ShardKernel):
+                slot = regs.get(f"band:{op.rank}")
+                signatures.add((op.stencil, op.steps, op.h, op.w))
+                bound.append((_TAG["ShardKernel"],
+                              _bind_shard_kernel(slot, op, plan, cache)))
+            elif isinstance(op, ShardStore):
+                slot = regs.free(f"band:{op.rank}", ordinal)
+                y0, y1, x0, x1 = op.y0, op.y1, op.x0, op.x1
+
+                def run(rt, _s=slot, _y0=y0, _y1=y1, _x0=x0, _x1=x1):
+                    band = rt.bands[_s]
+                    rt.bands[_s] = None
+                    rt.staged.append((_y0, _y1, _x0, _x1, band))
+
+                bound.append((_TAG["ShardStore"], run))
+            else:  # pragma: no cover - planner/lowering version skew
+                raise TypeError(f"unknown sharded op {op!r}")
+        stages.append(ShardStage(label=label, ops=tuple(bound)))
+
+    return CompiledShardedPlan(
+        plan=plan,
+        stages=tuple(stages),
+        n_slots=regs.n_slots,
         shape_buckets=len(signatures),
         cache=cache,
         lower_s=time.perf_counter() - t0,

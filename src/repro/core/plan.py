@@ -51,6 +51,8 @@ __all__ = [
     "H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel", "HostCommit",
     "Compress", "Decompress",
     "Op", "ExecutionPlan", "PlanBuilder",
+    "DeviceShard", "HaloSend", "HaloRecv", "ShardLoad", "ShardStore",
+    "ShardKernel", "ShardOp", "ShardedPlan",
 ]
 
 
@@ -71,6 +73,8 @@ class TransferStats:
     d2h_wire_bytes: int = 0
     codec_ops: int = 0          # Compress + Decompress op count
     buffer_bytes: int = 0       # on-device region-sharing copies ("O/D")
+    ici_bytes: int = 0          # inter-chip halo payload (send side)
+    halo_ops: int = 0           # HaloSend + paired HaloRecv op count
     kernel_calls: int = 0
     kernel_hbm_bytes: int = 0   # per-call band read + output write traffic
     flops: int = 0
@@ -100,6 +104,19 @@ class TransferStats:
         """wire / raw — 1.0 for uncompressed plans, < 1.0 when a codec
         shrinks the transfers."""
         return self.wire_bytes / max(self.transfer_bytes, 1)
+
+    def breakdown(self) -> Dict[str, int]:
+        """Per-category byte totals (the paper's Fig. 7 bars plus the
+        L2 ``ici`` category) — one key set for every plan type."""
+        return {
+            "h2d": self.h2d_bytes,
+            "d2h": self.d2h_bytes,
+            "h2d_wire": self.h2d_wire_bytes,
+            "d2h_wire": self.d2h_wire_bytes,
+            "odc": self.buffer_bytes,
+            "ici": self.ici_bytes,   # 0 for single-device plans
+            "kernel_hbm": self.kernel_hbm_bytes,
+        }
 
 
 @dataclasses.dataclass(frozen=True)
@@ -300,15 +317,7 @@ class ExecutionPlan:
     def breakdown(self) -> Dict[str, int]:
         """Per-category byte totals (the paper's Fig. 7 bars) read
         directly off the op stream."""
-        s = self.stats()
-        return {
-            "h2d": s.h2d_bytes,
-            "d2h": s.d2h_bytes,
-            "h2d_wire": s.h2d_wire_bytes,
-            "d2h_wire": s.d2h_wire_bytes,
-            "odc": s.buffer_bytes,
-            "kernel_hbm": s.kernel_hbm_bytes,
-        }
+        return self.stats().breakdown()
 
     def op_counts(self) -> Dict[str, int]:
         out: Dict[str, int] = {}
@@ -335,6 +344,258 @@ class ExecutionPlan:
                 out[-1][1].append(op)
             else:
                 out.append((key, [op]))
+        return out
+
+
+# --------------------------------------------------------------------------
+# Sharded plans (L2 / inter-chip): per-device op streams + halo exchange.
+#
+# The L2 engine in :mod:`repro.core.distributed` trades redundant
+# ghost-wedge computation for k_ici-step communication-avoiding halo
+# exchange — the paper's core trade one memory level up.  The IR below
+# makes that schedule a first-class plan: a :class:`ShardedPlan` holds one
+# op stream per :class:`DeviceShard` plus a global barrier structure
+# (``barriers``), and its accounting — ICI bytes, ghost-wedge redundancy,
+# collective bytes per round — is derived from the op streams exactly
+# like :class:`TransferStats` is derived from an :class:`ExecutionPlan`.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceShard:
+    """Provenance of one device's sub-domain in a sharded plan.
+
+    ``(row, col)`` are mesh coordinates; ``[y0, y1) x [x0, x1)`` is the
+    owned region of the global framed domain (uniform across ranks — the
+    shard_map backend requires even divisibility)."""
+
+    rank: int
+    row: int
+    col: int
+    y0: int
+    y1: int
+    x0: int
+    x1: int
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.y1 - self.y0, self.x1 - self.x0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLoad:
+    """Place the shard's owned region on its device (the once-per-run
+    H2D of the L2 schedule — the domain then stays resident)."""
+
+    rank: int
+    y0: int
+    y1: int
+    x0: int
+    x1: int
+    nbytes: int
+    round: int
+    phase: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStore:
+    """Stage the shard's owned region back to the host (committed at the
+    final barrier)."""
+
+    rank: int
+    y0: int
+    y1: int
+    x0: int
+    x1: int
+    nbytes: int
+    round: int
+    phase: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSend:
+    """Send ``depth`` edge rows/columns of this rank's band to ``dst``.
+
+    ``axis`` 0 exchanges rows of the owned band; ``axis`` 1 exchanges
+    columns of the *row-extended* band (corners ride along — the
+    ppermute ordering of :mod:`repro.core.distributed`).  ``side`` names
+    the edge of the sender's band: ``"hi"`` (bottom/right) payloads
+    attach at the receiver's ``"lo"`` (top/left) edge and vice versa.
+    ``nbytes`` is the send-side ICI payload."""
+
+    rank: int        # src shard
+    dst: int         # dst shard
+    axis: int        # 0 = rows, 1 = columns
+    side: str        # "lo" | "hi" — sender's edge
+    depth: int       # k_ici * r rows/cols
+    nbytes: int
+    round: int
+    phase: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloRecv:
+    """Attach a neighbour's halo payload at this rank's ``side`` edge.
+
+    ``src == -1`` marks a mesh edge: the band is zero-padded instead
+    (exactly what ``ppermute`` leaves for non-receivers) and no ICI
+    traffic occurs (``nbytes == 0``).  Every real recv (``src >= 0``)
+    pairs 1:1 with a :class:`HaloSend` in the source rank's stream."""
+
+    rank: int        # dst shard (owner of this stream)
+    src: int         # src shard; -1 = mesh edge (zero fill)
+    axis: int
+    side: str        # "lo" | "hi" — receiver's edge
+    depth: int
+    nbytes: int      # 0 when src == -1
+    round: int
+    phase: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardKernel:
+    """``steps`` fused, globally-masked stencil steps on the extended
+    band, cropped back to the owned region.
+
+    The band covers ``[gy0, gy0+h) x [gx0, gx0+w)`` in global
+    coordinates (origin = owned region minus the ``k_ici*r`` halo).
+    ``elements`` counts every updated element per round — the owned
+    interior *plus* the redundant ghost wedges; ``hbm_bytes`` is one
+    band read + one band write per fused call, mirroring
+    :func:`fused_kernel_geometry`'s model."""
+
+    rank: int
+    stencil: str
+    steps: int
+    gy0: int
+    gx0: int
+    h: int
+    w: int
+    hbm_bytes: int
+    flops: int
+    elements: int
+    round: int
+    phase: int
+
+
+ShardOp = Union[ShardLoad, ShardStore, HaloSend, HaloRecv, ShardKernel]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan:
+    """A compiled multi-device schedule: one op stream per shard.
+
+    ``barriers`` is the global barrier structure: a tuple of phase
+    labels; every op's ``phase`` indexes into it, and an executor must
+    run phase ``p`` of *every* stream before any op of phase ``p+1``
+    (within a phase, rank order is free — sends and recvs live in
+    separate phases, so the lockstep is deadlock-free by construction).
+    """
+
+    stencil: str
+    Y: int
+    X: int
+    itemsize: int
+    n: int
+    k_ici: int
+    mesh_shape: Tuple[int, int]
+    radius: int
+    shards: Tuple[DeviceShard, ...]
+    streams: Tuple[Tuple[ShardOp, ...], ...]
+    barriers: Tuple[str, ...]
+    exact_elements: int
+
+    @property
+    def n_ranks(self) -> int:
+        return len(self.shards)
+
+    @property
+    def rounds(self) -> int:
+        return self.n // self.k_ici
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.streams)
+
+    def _accumulate(self, s: "TransferStats", ops) -> "TransferStats":
+        for op in ops:
+            if isinstance(op, ShardLoad):
+                s.h2d_bytes += op.nbytes
+                s.h2d_wire_bytes += op.nbytes
+            elif isinstance(op, ShardStore):
+                s.d2h_bytes += op.nbytes
+                s.d2h_wire_bytes += op.nbytes
+            elif isinstance(op, HaloSend):
+                s.ici_bytes += op.nbytes
+                s.halo_ops += 1
+            elif isinstance(op, HaloRecv):
+                if op.src >= 0:
+                    s.halo_ops += 1
+            elif isinstance(op, ShardKernel):
+                s.kernel_calls += 1
+                s.kernel_hbm_bytes += op.hbm_bytes
+                s.flops += op.flops
+                s.elements_computed += op.elements
+            else:  # pragma: no cover - planner/IR version skew
+                raise TypeError(f"unknown sharded op {op!r}")
+        return s
+
+    def stats(self) -> TransferStats:
+        """Aggregate :class:`TransferStats` over every rank's stream —
+        the single source of truth for the sharded accounting, derived
+        from the plan with zero device work (the dry-run executor
+        returns it untouched)."""
+        s = TransferStats(exact_elements=self.exact_elements)
+        for stream in self.streams:
+            self._accumulate(s, stream)
+        return s
+
+    def per_rank_stats(self, rank: int) -> TransferStats:
+        """One rank's accounting; ``exact_elements`` is the rank's share
+        (``n x`` its owned-interior elements)."""
+        sh = self.shards[rank]
+        r = self.radius
+        rows = max(0, min(sh.y1, self.Y - r) - max(sh.y0, r))
+        cols = max(0, min(sh.x1, self.X - r) - max(sh.x0, r))
+        s = TransferStats(exact_elements=self.n * rows * cols)
+        return self._accumulate(s, self.streams[rank])
+
+    def ici_bytes_per_round(self, rank: int) -> int:
+        """Plan-derived send-side ICI bytes one rank pushes per round
+        (uniform across rounds — round 0 is read off the stream)."""
+        return sum(op.nbytes for op in self.streams[rank]
+                   if isinstance(op, HaloSend) and op.round == 0)
+
+    @property
+    def collective_bytes_per_round(self) -> int:
+        """Per-rank ICI bytes per round, derived from the op streams
+        (max over ranks).  For a rank with neighbours on both sides of
+        both mesh axes this equals the analytic formula in
+        :func:`repro.core.distributed.collective_bytes_per_round`; edge
+        ranks push less (no payload crosses a mesh boundary)."""
+        return max((self.ici_bytes_per_round(r) for r in range(self.n_ranks)),
+                   default=0)
+
+    def breakdown(self) -> Dict[str, int]:
+        """Per-category byte totals — the Fig. 7 bars plus the L2 ICI
+        category (same keys as :meth:`ExecutionPlan.breakdown`)."""
+        return self.stats().breakdown()
+
+    def op_counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for stream in self.streams:
+            for op in stream:
+                k = type(op).__name__
+                out[k] = out.get(k, 0) + 1
+        return out
+
+    def phases(self) -> List[Tuple[str, List[ShardOp]]]:
+        """Ops grouped by global phase, in barrier order (rank order
+        within a phase) — the structure executors walk."""
+        out: List[Tuple[str, List[ShardOp]]] = [
+            (label, []) for label in self.barriers]
+        for stream in self.streams:
+            for op in stream:
+                out[op.phase][1].append(op)
         return out
 
 

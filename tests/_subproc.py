@@ -1,0 +1,34 @@
+"""Shared fake-device subprocess harness for multi-device tests.
+
+JAX fixes its device topology at first backend use, so multi-device
+tests (8 fake CPU devices via ``--xla_force_host_platform_device_count``)
+must run in a subprocess to keep the main pytest session single-device.
+This helper owns the env setup and the assert-runner pattern that
+``test_distributed.py``, ``test_elastic.py``, and ``test_shard_plan.py``
+previously each duplicated inline.
+"""
+import os
+import subprocess
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_fake_device_subprocess(code: str, ok_token: str,
+                               n_devices: int = 8,
+                               timeout: int = 900) -> None:
+    """Run ``code`` in a fresh interpreter with ``n_devices`` fake CPU
+    devices and assert it printed ``ok_token``.
+
+    ``XLA_FLAGS`` is set in the child's environment (before any jax
+    import can happen), so the code string needs no ``os.environ``
+    boilerplate.  On failure the child's stderr tail is the assertion
+    message."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env,
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert ok_token in out.stdout, out.stderr[-3000:]

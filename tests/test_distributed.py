@@ -1,16 +1,14 @@
 """L2 (ICI) distributed stencil: shard_map + ppermute ghost-cell expansion.
 
-Multi-device correctness runs in a subprocess with 8 fake CPU devices so
-the main test session keeps its single-device jax state (the dry-run is
-the only place allowed to see 512 devices).
+Multi-device correctness runs in a subprocess with 8 fake CPU devices
+(via ``tests/_subproc.py``) so the main test session keeps its
+single-device jax state (the dry-run is the only place allowed to see
+512 devices).
 """
-import os
-import subprocess
-import sys
-
 import numpy as np
 import jax.numpy as jnp
 
+from _subproc import run_fake_device_subprocess
 from repro.compat import AxisType, make_mesh
 from repro.core.distributed import (
     collective_bytes_per_round, run_distributed,
@@ -19,8 +17,6 @@ from repro.core.reference import run_reference
 from repro.core.stencil import get_stencil
 
 _SUBPROC = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.compat import AxisType, make_mesh
 from repro.core.distributed import run_distributed
@@ -42,13 +38,7 @@ print("SUBPROC_OK")
 
 
 def test_distributed_multidevice_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run(
-        [sys.executable, "-c", _SUBPROC], env=env,
-        capture_output=True, text=True, timeout=900,
-    )
-    assert "SUBPROC_OK" in out.stdout, out.stderr[-3000:]
+    run_fake_device_subprocess(_SUBPROC, "SUBPROC_OK")
 
 
 def test_distributed_single_device_mesh():

@@ -1,15 +1,11 @@
 """Elastic restart: checkpoint on a 4-device mesh, restore onto 2 devices.
 
-Runs in a subprocess (8 fake devices) so the main session stays
-single-device.
+Runs in a subprocess (8 fake devices, via ``tests/_subproc.py``) so the
+main session stays single-device.
 """
-import os
-import subprocess
-import sys
+from _subproc import run_fake_device_subprocess
 
 _SUBPROC = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.compat import AxisType, make_mesh
@@ -55,10 +51,4 @@ print("ELASTIC_OK")
 
 
 def test_elastic_reshard_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run(
-        [sys.executable, "-c", _SUBPROC], env=env,
-        capture_output=True, text=True, timeout=900,
-    )
-    assert "ELASTIC_OK" in out.stdout, out.stderr[-3000:]
+    run_fake_device_subprocess(_SUBPROC, "ELASTIC_OK")
