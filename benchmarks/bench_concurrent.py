@@ -1,0 +1,161 @@
+"""Concurrent-serving benchmark: sustained jobs/sec and latency tails.
+
+    PYTHONPATH=src python -m benchmarks.bench_concurrent --json BENCH_serve.json
+
+Drives a :class:`repro.serve.StencilService` through a mixed 8-job trace
+(three stencils, four shapes, two codecs, a couple of deadlines) three
+ways:
+
+* **cold flush** — all 8 jobs interleaved by the cross-job scheduler on
+  an empty cache: per-job latency (flush start -> job's last commit),
+  sustained jobs/sec, p50/p99;
+* **warm flush** — the same trace resubmitted (plus shapes the service
+  has never seen that fall inside existing buckets): total
+  ``kernel_compiles`` must be exactly 0 — this is the structural record
+  CI gates on;
+* **solo baseline** — each job run alone (warm, same double-buffered
+  discipline) for the back-to-back comparison, measured and modeled.
+
+Structural fields (``plan_ops``, ``stage_count``, ``shape_buckets``,
+``kernel_compiles``) are deterministic functions of the planner, the
+lowering, and the shared caches — ``check_regression.py`` gates them
+exactly against ``benchmarks/baselines_serve.json``.  Wall-clock fields
+(latency, jobs/sec, modeled seconds) are informational artifacts only.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.kernels.dispatch import DispatchPolicy
+from repro.serve import StencilJob, StencilService
+
+# (stencil, framed shape, codec, deadline) x fixed engine knobs.  Shapes
+# repeat Y-heights within a (stencil, X) group on purpose: the warm pass
+# must route every one of them to an already-compiled bucket.
+TRACE = [
+    ("box2d1r", (130, 130), "identity", None),
+    ("gradient2d", (130, 130), "identity", 0.5),
+    ("box2d1r", (106, 130), "zrle", None),
+    ("box2d2r", (132, 132), "identity", None),
+    ("box2d1r", (130, 130), "identity", 0.2),
+    ("gradient2d", (114, 130), "identity", None),
+    ("box2d2r", (108, 132), "zrle", None),
+    ("box2d1r", (122, 130), "identity", None),
+]
+# unseen-at-warm-time heights that fall inside the buckets above
+WARM_EXTRA = [
+    ("box2d1r", (114, 130), "identity", None),
+    ("box2d2r", (116, 132), "identity", None),
+]
+STEPS, D, S_TB, K_ON = 16, 4, 4, 2
+
+
+def _jobs(trace):
+    return [StencilJob(shape=shape, stencil=name, steps=STEPS, codec=codec,
+                       deadline=deadline, d=D, s_tb=S_TB, k_on=K_ON)
+            for name, shape, codec, deadline in trace]
+
+
+def _flush(svc, jobs, rng):
+    for job in jobs:
+        svc.submit(job, rng.standard_normal(job.shape).astype(np.float32))
+    t0 = time.perf_counter()
+    results = svc.flush()
+    wall = time.perf_counter() - t0
+    return results, wall
+
+
+def run(json_path=None):
+    # pin the dispatch policy: CI runs on CPU and the structural records
+    # must not depend on which backend "auto" resolves to
+    svc = StencilService(policy=DispatchPolicy(impl="reference"))
+    rng = np.random.default_rng(31)
+    records = {}
+
+    # -- cold: the 8-job mixed trace, interleaved --
+    results, wall = _flush(svc, _jobs(TRACE), rng)
+    lat = sorted(r.latency_s for r in results)
+    cold_compiles = sum(r.exec_stats.kernel_compiles for r in results)
+    for r in results:
+        job = next(j for j in svc.last_admission if j.job_id == r.job_id)
+        plan = job.compiled.plan
+        records[f"serve/job{r.job_id}"] = {
+            "stencil": plan.stencil, "shape": list(job.x.shape),
+            "plan_ops": len(plan.ops),
+            "stage_count": r.exec_stats.stage_count,
+            "shape_buckets": r.exec_stats.shape_buckets,
+            "latency_s": r.latency_s,            # non-gating
+            "predicted_s": r.predicted_s,        # non-gating
+        }
+    mi = svc.modeled_makespan(interleaved=True)
+    mb = svc.modeled_makespan(interleaved=False)
+    records["serve/trace"] = {
+        "jobs": len(results),
+        "kernel_compiles": cold_compiles,
+        "shape_buckets": len(svc.buckets),
+        "jobs_per_s": len(results) / wall,                       # non-gating
+        "p50_latency_s": float(np.percentile(lat, 50)),          # non-gating
+        "p99_latency_s": float(np.percentile(lat, 99)),          # non-gating
+        "modeled_interleaved_s": mi,                             # non-gating
+        "modeled_back_to_back_s": mb,                            # non-gating
+    }
+
+    # -- warm: same trace + unseen in-bucket heights -> 0 compiles --
+    results_w, wall_w = _flush(svc, _jobs(TRACE + WARM_EXTRA), rng)
+    lat_w = sorted(r.latency_s for r in results_w)
+    records["serve/warm"] = {
+        "jobs": len(results_w),
+        "kernel_compiles": sum(r.exec_stats.kernel_compiles
+                               for r in results_w),
+        "shape_buckets": len(svc.buckets),
+        "jobs_per_s": len(results_w) / wall_w,                   # non-gating
+        "p50_latency_s": float(np.percentile(lat_w, 50)),        # non-gating
+        "p99_latency_s": float(np.percentile(lat_w, 99)),        # non-gating
+    }
+
+    # -- solo baseline: warm back-to-back, same pipelined discipline --
+    t0 = time.perf_counter()
+    solo = [svc.run_solo(job, rng.standard_normal(job.shape)
+                         .astype(np.float32)) for job in _jobs(TRACE)]
+    solo_wall = time.perf_counter() - t0
+    records["serve/solo"] = {
+        "jobs": len(solo),
+        "kernel_compiles": sum(r.exec_stats.kernel_compiles for r in solo),
+        "jobs_per_s": len(solo) / solo_wall,                     # non-gating
+    }
+
+    print(f"cold : {records['serve/trace']['jobs_per_s']:6.2f} jobs/s  "
+          f"p50={records['serve/trace']['p50_latency_s']*1e3:7.1f}ms  "
+          f"p99={records['serve/trace']['p99_latency_s']*1e3:7.1f}ms  "
+          f"compiles={cold_compiles}")
+    print(f"warm : {records['serve/warm']['jobs_per_s']:6.2f} jobs/s  "
+          f"p50={records['serve/warm']['p50_latency_s']*1e3:7.1f}ms  "
+          f"p99={records['serve/warm']['p99_latency_s']*1e3:7.1f}ms  "
+          f"compiles={records['serve/warm']['kernel_compiles']}")
+    print(f"solo : {records['serve/solo']['jobs_per_s']:6.2f} jobs/s "
+          f"(warm back-to-back baseline)")
+    print(f"model: interleaved {mi*1e6:.1f}us vs back-to-back {mb*1e6:.1f}us "
+          f"({(1 - mi/mb)*100:.0f}% win)")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(records, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path} ({len(records)} records)")
+    return records
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the record dict as JSON (CI gates the "
+                         "structural fields via check_regression.py)")
+    args = ap.parse_args(argv)
+    run(json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

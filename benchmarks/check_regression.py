@@ -41,9 +41,15 @@ GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes", "ici_bytes")
 # (L2) records add the plan-derived per-round collective bytes and the
 # ghost-wedge redundancy — deterministic functions of the schedule, so
 # any drift is a real planner change that deserves a baseline refresh.
+# The serving records (BENCH_serve.json vs baselines_serve.json) gate
+# ``kernel_compiles`` the same way: total kernel traces across an M-job
+# service trace are a deterministic function of the shared cache and
+# bucket registry — one extra compile means warm-cache routing broke.
+# Latency/throughput fields in those records are not listed here, so
+# they stay non-gating artifacts.
 EXACT_FIELDS = ("plan_ops", "stage_count", "shape_buckets",
                 "collective_bytes_per_round", "redundant_elements",
-                "halo_ops")
+                "halo_ops", "kernel_compiles")
 
 
 def check(current: dict, baseline: dict, tolerance: float):

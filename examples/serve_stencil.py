@@ -1,0 +1,69 @@
+"""Stencil-as-a-service: warm caches + cross-job pipelining in ~60 lines.
+
+A long-lived :class:`StencilService` amortizes kernel compilation across
+jobs (one warm KernelCache + cross-job shape-bucket registry + device
+slot pool) and interleaves concurrent jobs' stage programs so one job's
+H2D hides under another job's kernels — overlap a single job's schedule
+can never express.
+
+    PYTHONPATH=src python examples/serve_stencil.py
+"""
+import numpy as np
+
+from repro.kernels.dispatch import DispatchPolicy
+from repro.serve import StencilJob, StencilService
+
+
+def main():
+    # one policy for the service lifetime keeps kernel signatures stable
+    svc = StencilService(policy=DispatchPolicy(impl="reference"))
+    rng = np.random.default_rng(7)
+
+    batch = [
+        StencilJob(shape=(130, 130), stencil="box2d1r", steps=16,
+                   d=4, s_tb=4, deadline=0.5),
+        StencilJob(shape=(130, 130), stencil="gradient2d", steps=16,
+                   d=4, s_tb=4),
+        StencilJob(shape=(106, 130), stencil="box2d1r", steps=16,
+                   d=4, s_tb=4, codec="zrle"),
+        StencilJob(shape=(132, 132), stencil="box2d2r", steps=16,
+                   d=4, s_tb=4),
+    ]
+    xs = [rng.standard_normal(j.shape).astype(np.float32) for j in batch]
+
+    print("cold batch (mixed shapes/stencils/codecs):")
+    for job, x in zip(batch, xs):
+        svc.submit(job, x)
+    for r in svc.flush():
+        print(f"  job {r.job_id}: latency={r.latency_s*1e3:7.1f}ms  "
+              f"predicted={r.predicted_s*1e6:6.1f}us(model)  "
+              f"compiles={r.exec_stats.kernel_compiles}  "
+              f"cache_hits={r.exec_stats.kernel_cache_hits}")
+
+    mi = svc.modeled_makespan(interleaved=True)
+    mb = svc.modeled_makespan(interleaved=False)
+    print(f"  modeled makespan: interleaved {mi*1e6:.1f}us vs "
+          f"back-to-back {mb*1e6:.1f}us  ({(1 - mi/mb)*100:.0f}% win)")
+
+    # warm resubmits: same buckets -> zero new kernel traces, even for a
+    # Y the service has never seen (106 < 130 falls in the 130-bucket)
+    print("warm batch (unseen 114-row shape reuses the existing bucket):")
+    for job in (batch[0],
+                StencilJob(shape=(114, 130), stencil="box2d1r", steps=16,
+                           d=4, s_tb=4)):
+        svc.submit(job, rng.standard_normal(job.shape).astype(np.float32))
+    for r in svc.flush():
+        print(f"  job {r.job_id}: latency={r.latency_s*1e3:7.1f}ms  "
+              f"compiles={r.exec_stats.kernel_compiles}  "
+              f"cache_hits={r.exec_stats.kernel_cache_hits}")
+
+    s = svc.service_stats()
+    print(f"service lifetime: {s['jobs_completed']} jobs, "
+          f"{s['kernel_compiles']} kernel compiles total, "
+          f"{s['kernel_cache_hits']} cache hits, "
+          f"{s['shape_buckets']} shape buckets, "
+          f"slot pool reuses={s['slot_pool']['reuses']}")
+
+
+if __name__ == "__main__":
+    main()

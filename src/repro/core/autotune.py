@@ -29,10 +29,15 @@ from .compress import compress_plan
 from .executor import DryRunExecutor
 from .oocore import compile_plan
 from .params import CodeSpec, feasible
+from .plan import (
+    BufferRead, BufferWrite, Compress, D2H, ExecutionPlan, FusedKernel, H2D,
+)
 from .stencil import Stencil
 
 __all__ = ["Choice", "autotune", "optimization_target",
-           "ShardedChoice", "autotune_sharded"]
+           "ShardedChoice", "autotune_sharded",
+           "StageCost", "stage_costs", "pipeline_makespan",
+           "predicted_makespan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,6 +236,97 @@ def autotune_sharded(
                 ici_bytes=stats.ici_bytes, redundancy=stats.redundancy))
     out.sort(key=lambda c: c.time_s)
     return out
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    """Modeled resource demand of one ``(round, chunk)`` stage program.
+
+    ``key is None`` marks a HostCommit barrier stage — zero demand, but
+    a scheduling fence: the owning job's next H2D cannot start before
+    every staged write of that job has drained."""
+
+    key: Optional[Tuple[int, int]]
+    h2d_s: float       # interconnect in  (wire bytes / bw_intc)
+    d2h_s: float       # interconnect out (wire bytes / bw_intc)
+    compute_s: float   # kernel roofline + on-device buffer copies
+
+
+def stage_costs(plan: ExecutionPlan, hw: Hardware) -> List[StageCost]:
+    """Cost every stage of ``plan`` under the Sec. III model.
+
+    Transfers are charged at *wire* bytes (a ``Compress`` op adjusts its
+    wrapped transfer by ``wire - raw``); BufferRead/Write traffic rides
+    the HBM bus, so it lands in the compute term alongside the kernel
+    roofline — exactly the resource split
+    :meth:`EngineTimes.total_overlapped` assumes, but per stage instead
+    of per plan, which is what lets a scheduler reason about *inter-job*
+    overlap."""
+    out: List[StageCost] = []
+    for key, ops in plan.stages():
+        if key is None:
+            out.append(StageCost(None, 0.0, 0.0, 0.0))
+            continue
+        h2d = d2h = 0
+        compute = 0.0
+        for op in ops:
+            if isinstance(op, H2D):
+                h2d += op.nbytes
+            elif isinstance(op, D2H):
+                d2h += op.nbytes
+            elif isinstance(op, Compress):
+                delta = op.wire_nbytes - op.raw_nbytes
+                if op.direction == "h2d":
+                    h2d += delta
+                else:
+                    d2h += delta
+            elif isinstance(op, (BufferWrite, BufferRead)):
+                compute += op.nbytes / hw.bw_dmem
+            elif isinstance(op, FusedKernel):
+                compute += max(op.hbm_bytes / hw.bw_dmem,
+                               op.flops / hw.peak_vpu_flops)
+        out.append(StageCost(key, h2d / hw.bw_intc, d2h / hw.bw_intc,
+                             compute))
+    return out
+
+
+def pipeline_makespan(schedule: Iterable[Tuple[object, StageCost]]) -> float:
+    """Makespan of a stage schedule on the three-engine machine.
+
+    ``schedule`` is ``(job, StageCost)`` in issue order — possibly an
+    interleaving of several jobs.  The machine is the paper's
+    ``N_strm = 3`` pipeline: one H2D engine, one compute engine, one D2H
+    engine, each serially ordered, a stage flowing H2D -> compute -> D2H.
+    Barrier stages (``key is None``) model HostCommit: the owning job's
+    next H2D waits until all of that job's staged writes have drained.
+    Interleaving wins exactly when one job's transfer hides under
+    another job's compute — idle engine time a single job cannot fill.
+    """
+    h2d_free = comp_free = d2h_free = 0.0
+    commit: dict = {}    # job -> host rows ready (last barrier drain time)
+    staged: dict = {}    # job -> drain time of its latest staged D2H
+    t_end = 0.0
+    for job, sc in schedule:
+        if sc.key is None:
+            t = staged.get(job, commit.get(job, 0.0))
+            commit[job] = t
+            t_end = max(t_end, t)
+            continue
+        start = max(h2d_free, commit.get(job, 0.0))
+        h2d_free = start + sc.h2d_s
+        comp_free = max(comp_free, h2d_free) + sc.compute_s
+        d2h_free = max(d2h_free, comp_free) + sc.d2h_s
+        staged[job] = d2h_free
+        t_end = max(t_end, d2h_free)
+    return t_end
+
+
+def predicted_makespan(plan: ExecutionPlan, hw: Hardware) -> float:
+    """Modeled solo makespan of one plan on the three-engine pipeline.
+
+    The dry-run cost the serving layer's deadline-aware admission sorts
+    on: no device work, no arrays — stage geometry in, seconds out."""
+    return pipeline_makespan((0, sc) for sc in stage_costs(plan, hw))
 
 
 def optimization_target(st: Stencil, sz: int, n_steps: int,

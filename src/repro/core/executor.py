@@ -41,6 +41,7 @@ property of the *plan*, not of how it was executed.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -191,41 +192,73 @@ class _DeviceState:
 
 
 class _LoweredExecutorBase:
-    """Shared compile-then-run machinery for the device executors."""
+    """Shared compile-then-run machinery for the device executors.
+
+    Re-entrant: ``execute`` may be called from several threads at once
+    (the serving layer compiles/admits jobs concurrently).  The lowering
+    memo is a keyed, locked cache; ``exec_stats`` is thread-local on
+    read (each thread sees its own last run) with a cross-thread
+    fallback to the most recent run, which preserves the single-threaded
+    ``executor.exec_stats`` idiom everywhere else."""
 
     name = "base"
     _pipeline = False
+    _MEMO_CAP = 64   # FIFO bound on retained (plan -> CompiledPlan) entries
 
     def __init__(self, fused_step: Optional[FusedStep] = None,
-                 policy=None, lowered: bool = True):
+                 policy=None, lowered: bool = True, slot_pool=None):
         self.fused_step = fused_step
         self.policy = policy
         self.lowered = lowered
         # kernel-signature cache shared across execute() calls: re-running
         # a plan (or one with the same shape buckets) is all hits
         self.kernel_cache = KernelCache()
-        self.exec_stats: Optional[ExecStats] = None
-        # single-entry lowering memo: (plan, fused_step, policy, compiled).
-        # Holding the plan keeps `is` identity sound, and comparing the
-        # fused_step/policy snapshot invalidates the memo if either public
-        # attribute is swapped between runs.
-        self._lowered_memo = None
+        # optional shared SlotPool: device storage leased per run and
+        # returned after commit instead of allocated per CompiledPlan
+        self.slot_pool = slot_pool
+        # keyed lowering memo: id(plan) -> (plan, fused_step, policy,
+        # compiled).  Holding the plan keeps id()/`is` identity sound, and
+        # comparing the fused_step/policy snapshot invalidates an entry if
+        # either public attribute was swapped between runs.
+        self._lowered_memo: Dict[int, tuple] = {}
+        self._memo_lock = threading.Lock()
+        self._tls = threading.local()
+        self._last_stats: Optional[ExecStats] = None
+
+    @property
+    def exec_stats(self) -> Optional[ExecStats]:
+        stats = getattr(self._tls, "stats", None)
+        return stats if stats is not None else self._last_stats
+
+    @exec_stats.setter
+    def exec_stats(self, value: Optional[ExecStats]) -> None:
+        self._tls.stats = value
+        self._last_stats = value
 
     def _compiled(self, plan: ExecutionPlan):
-        memo = self._lowered_memo
-        if (memo is not None and memo[0] is plan
-                and memo[1] is self.fused_step and memo[2] == self.policy):
-            return memo[3]
-        compiled = lower(plan, policy=self.policy, fused_step=self.fused_step,
+        key = id(plan)
+        fused_step, policy = self.fused_step, self.policy
+        with self._memo_lock:
+            memo = self._lowered_memo.get(key)
+            if (memo is not None and memo[0] is plan
+                    and memo[1] is fused_step and memo[2] == policy):
+                return memo[3]
+        # lower outside the lock: the KernelCache is itself thread-safe,
+        # so a racing duplicate lower() costs hits, not recompiles
+        compiled = lower(plan, policy=policy, fused_step=fused_step,
                          kernel_cache=self.kernel_cache)
-        self._lowered_memo = (plan, self.fused_step, self.policy, compiled)
+        with self._memo_lock:
+            if key not in self._lowered_memo and \
+                    len(self._lowered_memo) >= self._MEMO_CAP:
+                self._lowered_memo.pop(next(iter(self._lowered_memo)))
+            self._lowered_memo[key] = (plan, fused_step, policy, compiled)
         return compiled
 
     def execute(self, plan: ExecutionPlan,
                 x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
         if self.lowered:
             host, stats, exec_stats = self._compiled(plan).execute(
-                x, pipeline=self._pipeline)
+                x, pipeline=self._pipeline, slot_pool=self.slot_pool)
             exec_stats.executor = self.name
             self.exec_stats = exec_stats
             return host, stats

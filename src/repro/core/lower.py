@@ -38,7 +38,9 @@ not a plan is lowered.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -54,7 +56,8 @@ from .plan import (
 )
 
 __all__ = [
-    "ExecStats", "KernelCache", "CompiledPlan", "LoweredStage", "lower",
+    "ExecStats", "KernelCache", "BucketRegistry", "SlotPool",
+    "CompiledPlan", "LoweredStage", "lower",
     "CompiledShardedPlan", "ShardStage", "lower_sharded",
     "check_domain", "validate_domain",
 ]
@@ -90,6 +93,10 @@ class ExecStats:
     lower_s: float = 0.0
     wall_s: float = 0.0
 
+    def __post_init__(self):
+        # plain attribute, not a dataclass field: asdict/== never see it
+        self._lock = threading.Lock()
+
     @property
     def kernel_cache_misses(self) -> int:
         return self.kernel_compiles
@@ -98,6 +105,29 @@ class ExecStats:
         d = dataclasses.asdict(self)
         d["kernel_cache_misses"] = self.kernel_compiles
         return d
+
+    def merge(self, other: "ExecStats") -> "ExecStats":
+        """Accumulate another run's counters and stage timers into this
+        one, thread-safely — the aggregation a long-lived service does as
+        concurrent jobs complete.  Counters and wall clocks sum;
+        ``shape_buckets``/``stage_count`` sum per-run values (a shared
+        signature counts once per run that used it); identity fields keep
+        the first non-empty value."""
+        with self._lock:
+            for k, v in other.op_counts.items():
+                self.op_counts[k] = self.op_counts.get(k, 0) + v
+            for k, v in other.op_wall_s.items():
+                self.op_wall_s[k] = self.op_wall_s.get(k, 0.0) + v
+            self.kernel_calls += other.kernel_calls
+            self.shape_buckets += other.shape_buckets
+            self.kernel_compiles += other.kernel_compiles
+            self.kernel_cache_hits += other.kernel_cache_hits
+            self.stage_count += other.stage_count
+            self.lower_s += other.lower_s
+            self.wall_s += other.wall_s
+            self.executor = self.executor or other.executor
+            self.kernel_impl = self.kernel_impl or other.kernel_impl
+        return self
 
 
 class KernelCache:
@@ -108,24 +138,124 @@ class KernelCache:
     JAX's jit cache traces on, so ``misses`` counts actual retraces and
     ``hits`` counts dispatches that reuse a compiled kernel.  Executors
     hold one cache across ``execute()`` calls, so re-running a plan (or
-    running another plan with the same buckets) is all hits."""
+    running another plan with the same buckets) is all hits.
+
+    Thread-safe: a service shares one warm cache across concurrent jobs,
+    and CI gates on the hit/miss counters, so lookups (including the
+    ``make`` call on a miss) run under a lock — a signature is compiled
+    and counted exactly once no matter how many jobs race to it."""
 
     def __init__(self):
         self._entries: Dict[tuple, Callable] = {}
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
 
     def lookup(self, key: tuple, make: Callable[[], Callable]) -> Callable:
-        fn = self._entries.get(key)
-        if fn is None:
-            self.misses += 1
-            fn = self._entries[key] = make()
-        else:
-            self.hits += 1
-        return fn
+        with self._lock:
+            fn = self._entries.get(key)
+            if fn is None:
+                self.misses += 1
+                fn = self._entries[key] = make()
+            else:
+                self.hits += 1
+            return fn
+
+    def snapshot(self) -> Tuple[int, int]:
+        """Atomic ``(hits, misses)`` read — per-job compile attribution
+        in a shared-cache service needs both counters from one instant."""
+        with self._lock:
+            return self.hits, self.misses
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
+
+
+class BucketRegistry:
+    """Cross-plan shape buckets: the service-lifetime companion of the
+    per-plan bucketing pass.
+
+    Maps a kernel group ``(stencil, steps, keep_top, keep_bottom, width,
+    itemsize)`` to the band heights already compiled for it.  When
+    :func:`lower` routes a plan through a registry, each group's padded
+    height becomes the smallest registered bucket that fits (registering
+    a new one only when none does), so a job with an *unseen shape* whose
+    bands fit existing buckets presents zero new kernel signatures to a
+    warm :class:`KernelCache` — the shape-bucketing pass amortized across
+    jobs instead of within one.  Padding stays on the frame-free side,
+    so results remain bit-identical (both-sides-framed groups never
+    reach the registry).  Thread-safe."""
+
+    def __init__(self):
+        self._heights: Dict[tuple, List[int]] = {}
+        self._lock = threading.Lock()
+
+    def resolve(self, group: tuple, height: int) -> int:
+        """Smallest registered bucket >= ``height`` for ``group``; when
+        none fits, ``height`` is registered as a new bucket."""
+        with self._lock:
+            heights = self._heights.setdefault(group, [])
+            i = bisect.bisect_left(heights, height)
+            if i < len(heights):
+                return heights[i]
+            heights.insert(i, height)
+            return height
+
+    def __len__(self) -> int:
+        """Total registered buckets (over all groups)."""
+        with self._lock:
+            return sum(len(v) for v in self._heights.values())
+
+
+class SlotPool:
+    """Device buffer-slot storage shared and reused across compiled plans.
+
+    A long-lived service owns one pool for its lifetime: every job leases
+    register/buffer slot storage when its runtime is built and releases
+    it when the job retires, so steady-state serving re-allocates no slot
+    storage per job (``reuses``/``peak_in_use`` make that observable).
+    Leases are exclusive — concurrent jobs each hold their own storage —
+    and release clears every slot so no device buffer outlives its job.
+    Thread-safe."""
+
+    def __init__(self):
+        self._free: List[Tuple[List, List]] = []
+        self._lock = threading.Lock()
+        self.leases = 0
+        self.reuses = 0
+        self.in_use = 0
+        self.peak_in_use = 0
+
+    def acquire(self, n_regs: int, n_bufs: int) -> Tuple[List, List]:
+        with self._lock:
+            self.leases += 1
+            if self._free:
+                self.reuses += 1
+                regs, bufs = self._free.pop()
+            else:
+                regs, bufs = [], []
+            self.in_use += 1
+            self.peak_in_use = max(self.peak_in_use, self.in_use)
+        if len(regs) < n_regs:
+            regs.extend([None] * (n_regs - len(regs)))
+        if len(bufs) < n_bufs:
+            bufs.extend([None] * (n_bufs - len(bufs)))
+        return regs, bufs
+
+    def release(self, regs: List, bufs: List) -> None:
+        for i in range(len(regs)):
+            regs[i] = None
+        for i in range(len(bufs)):
+            bufs[i] = None
+        with self._lock:
+            self._free.append((regs, bufs))
+            self.in_use -= 1
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"leases": self.leases, "reuses": self.reuses,
+                    "in_use": self.in_use, "peak_in_use": self.peak_in_use}
 
 
 class _Runtime:
@@ -135,10 +265,13 @@ class _Runtime:
 
     __slots__ = ("host", "regs", "bufs", "staged", "wire")
 
-    def __init__(self, host: np.ndarray, n_regs: int, n_bufs: int):
+    def __init__(self, host: np.ndarray, n_regs: int, n_bufs: int,
+                 regs: Optional[List] = None, bufs: Optional[List] = None):
         self.host = host
-        self.regs: List = [None] * n_regs
-        self.bufs: List = [None] * n_bufs
+        # storage may be leased from a SlotPool (possibly longer than
+        # needed — closures only ever index their bound slots)
+        self.regs: List = regs if regs is not None else [None] * n_regs
+        self.bufs: List = bufs if bufs is not None else [None] * n_bufs
         # staged D2H rows: (host_lo, host_hi, device rows, codec name|None)
         self.staged: List[tuple] = []
         # reg slot -> (payload, shape, dtype) between a non-identity
@@ -220,16 +353,35 @@ class CompiledPlan:
             "buf_slots": self.n_buf_slots,
         }
 
+    def runtime(self, x: np.ndarray,
+                slot_pool: Optional[SlotPool] = None) -> _Runtime:
+        """Build the slot-indexed runtime for one run, leasing slot
+        storage from ``slot_pool`` when given (release it back with
+        :meth:`release_runtime` when the run retires)."""
+        host = validate_domain(self.plan, x)
+        if slot_pool is None:
+            return _Runtime(host, self.n_reg_slots, self.n_buf_slots)
+        regs, bufs = slot_pool.acquire(self.n_reg_slots, self.n_buf_slots)
+        return _Runtime(host, self.n_reg_slots, self.n_buf_slots, regs, bufs)
+
+    @staticmethod
+    def release_runtime(rt: _Runtime,
+                        slot_pool: Optional[SlotPool]) -> None:
+        if slot_pool is not None:
+            slot_pool.release(rt.regs, rt.bufs)
+
     def execute(self, x: np.ndarray, pipeline: bool = False,
+                slot_pool: Optional[SlotPool] = None,
                 ) -> Tuple[np.ndarray, TransferStats, ExecStats]:
         """Run the stage programs.
 
         ``pipeline=True`` issues the next stage's prefetchable ops (H2D
         and host-side Compress) before the current stage's kernels — the
         double-buffered schedule; results are bitwise identical either
-        way because prefetched ops only read committed host rows."""
-        rt = _Runtime(validate_domain(self.plan, x),
-                      self.n_reg_slots, self.n_buf_slots)
+        way because prefetched ops only read committed host rows.
+        ``slot_pool`` leases the runtime's slot storage from a shared
+        pool instead of allocating fresh lists."""
+        rt = self.runtime(x, slot_pool)
         wall = [0.0] * len(OP_TAGS)
         counts = [0] * len(OP_TAGS)
         hits0, miss0 = self.cache.hits, self.cache.misses
@@ -261,6 +413,7 @@ class CompiledPlan:
                     prefetched[j + 1] = True
                 run(stage.rest if prefetched[j] else stage.ops)
         rt.commit()   # no-op unless a planner forgot the final barrier
+        self.release_runtime(rt, slot_pool)
 
         stats = ExecStats(
             kernel_impl=self.kernel_impl,
@@ -327,10 +480,15 @@ class _SlotAllocator:
         return slot
 
 
-def _bucket_heights(plan: ExecutionPlan, bucket: bool) -> Dict[tuple, int]:
+def _bucket_heights(plan: ExecutionPlan, bucket: bool,
+                    registry: Optional[BucketRegistry] = None,
+                    ) -> Dict[tuple, int]:
     """Per-group padded band heights: one bucket per ``(stencil, steps,
     keep_top, keep_bottom)`` group (its max h_in).  Both-sides-framed
-    bands are excluded — there is no frame-free side to pad."""
+    bands are excluded — there is no frame-free side to pad.  A
+    :class:`BucketRegistry` lifts each group's height to the smallest
+    already-compiled cross-plan bucket that fits, so warm-service jobs
+    with unseen shapes reuse existing kernel signatures."""
     buckets: Dict[tuple, int] = {}
     if not bucket:
         return buckets
@@ -338,6 +496,10 @@ def _bucket_heights(plan: ExecutionPlan, bucket: bool) -> Dict[tuple, int]:
         if isinstance(op, FusedKernel) and not (op.keep_top and op.keep_bottom):
             key = (op.stencil, op.steps, op.keep_top, op.keep_bottom)
             buckets[key] = max(buckets.get(key, 0), op.h_in)
+    if registry is not None:
+        for key, h in buckets.items():
+            buckets[key] = registry.resolve(
+                key + (plan.X, plan.itemsize), h)
     return buckets
 
 
@@ -372,7 +534,8 @@ def _bind_kernel(slot: int, op: FusedKernel, bucket_h: int, impl_name: str,
 
 
 def lower(plan: ExecutionPlan, policy=None, fused_step=None,
-          kernel_cache: Optional[KernelCache] = None) -> CompiledPlan:
+          kernel_cache: Optional[KernelCache] = None,
+          bucket_registry: Optional[BucketRegistry] = None) -> CompiledPlan:
     """Compile a plan into stage programs of slot-bound closures.
 
     ``fused_step`` (an explicit ``fn(band, name, steps, keep_top=...,
@@ -380,13 +543,16 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
     otherwise ``policy`` (a :class:`repro.kernels.dispatch.DispatchPolicy`,
     default ``auto``) picks the implementation per stencil/steps/backend.
     ``kernel_cache`` lets an executor share one signature cache across
-    plans and runs."""
+    plans and runs; ``bucket_registry`` additionally routes this plan's
+    band heights to already-registered cross-plan buckets so a warm
+    service compiles zero new kernels for shapes that fit an existing
+    bucket."""
     from repro.kernels.dispatch import DispatchPolicy, select_kernel
 
     t0 = time.perf_counter()
     policy = policy or DispatchPolicy()
     cache = kernel_cache if kernel_cache is not None else KernelCache()
-    buckets = _bucket_heights(plan, policy.bucket)
+    buckets = _bucket_heights(plan, policy.bucket, bucket_registry)
 
     regs = _SlotAllocator()
     bufs = _SlotAllocator()

@@ -1,1 +1,18 @@
-from .decode import make_prefill, make_decode_step  # noqa: F401
+"""Stencil-as-a-service: persistent plan server + cross-job scheduler.
+
+:class:`StencilService` keeps one warm kernel cache, shape-bucket
+registry, and device slot pool alive across jobs; the scheduler
+interleaves concurrent jobs' stage programs so one job's transfers
+hide under another's kernels (see :mod:`repro.serve.service`).
+"""
+from .scheduler import (  # noqa: F401
+    ScheduledJob, admission_order, interleave_stages, modeled_makespan,
+    run_interleaved,
+)
+from .service import JobResult, StencilJob, StencilService  # noqa: F401
+
+__all__ = [
+    "StencilService", "StencilJob", "JobResult",
+    "ScheduledJob", "admission_order", "interleave_stages",
+    "modeled_makespan", "run_interleaved",
+]

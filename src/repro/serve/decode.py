@@ -1,8 +1,8 @@
-"""Serving steps: batched prefill + single-token decode.
+"""LM serving steps: batched prefill + single-token decode.
 
-``serve_step`` for the dry-run decode shapes is ``make_decode_step`` —
-one new token against a ``seq_len``-deep KV cache (ring-buffer for SWA
-archs, O(1) recurrent state for SSM/hybrid).
+Legacy module, kept only for ``greedy_generate`` (the system test's
+end-to-end LM decode check); the serving layer proper is the stencil
+service in :mod:`repro.serve.service`.
 """
 from __future__ import annotations
 
