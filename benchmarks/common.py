@@ -41,20 +41,22 @@ PAPER_SPEEDUP_VS_RESREU = {
 
 
 def paper_plan(engine: str, name: str, sz: int, d: int, s_tb: int,
-               k_on: int = K_ON, n: int = N_STEPS, codec=None):
+               k_on: int = K_ON, n: int = N_STEPS, codec=None,
+               chunk_axis: int = 0):
     """Compile one engine's op schedule for a paper workload.
 
     The single place encoding the benchmark conventions: the domain is
     framed (``sz + 2r`` per side), ResReu is pinned to single-step
     kernels (its defining constraint), and InCore streams the whole
     domain as one chunk.  ``codec`` wraps every transfer in
-    Compress/Decompress ops (None = uncompressed)."""
+    Compress/Decompress ops (None = uncompressed); ``chunk_axis`` picks
+    the streaming axis (0 = the paper's row chunking)."""
     st = get_stencil(name)
     Y = X = sz + 2 * st.radius
     k_on_eff = 1 if engine == "resreu" else k_on
     d_eff = 1 if engine == "incore" else d
     return compile_plan(engine, st, Y, X, n, d_eff, s_tb, k_on_eff,
-                        codec=codec)
+                        codec=codec, chunk_axis=chunk_axis)
 
 
 def modeled(engine: str, name: str, sz: int, d: int, s_tb: int,

@@ -30,8 +30,17 @@ interpreter and the kernel-dispatch implementation) and reports the
 compilation-cache counters.  Timings are machine-dependent and never
 gate CI; the JSON is uploaded as a non-gating artifact.
 
-Unknown ``--engine``/``--codec``/``--executor``/``--fused-step`` names
-are a hard error (exit code 2), not a silent skip.
+``--dry-run`` also sweeps plan *geometry*: ``--chunk-axis 1`` reorients
+the 2-D engine sweep to column chunking (keys gain an ``/axisA``
+suffix), and ``--tile T0,T1[,T2]`` / ``--time-depth T[,T...]`` override
+the committed box_tb tile-grid x time-depth sweep on the 3-D
+``heat3d1r`` workload.  Every dry-run record carries its box geometry
+(``shape``, ``chunk_axis``, ``tiles``, ``time_depth``).
+
+Unknown ``--engine``/``--codec``/``--executor``/``--fused-step`` names,
+geometry flags outside ``--dry-run``, and infeasible ``--tile`` x
+``--time-depth`` combinations (apron deeper than a tile) are a hard
+error (exit code 2), not a silent skip.
 """
 import argparse
 import json
@@ -72,6 +81,63 @@ def _write_json(records, json_path) -> None:
 SHARD_MESH = (4, 2)
 SHARD_K_ICI = (1, 4, 8)
 
+# 3-D box temporal-blocking dry-run workload: a 1024^3 interior (4.3 GB
+# per array — out-of-core on the paper's 10 GB GPU), tile grids on the
+# leading two axes x time depths.  Geometry only: the dry-run executor
+# never allocates the domain.
+BOX_STENCIL = "heat3d1r"
+BOX_SHAPE = (1026, 1026, 1026)
+BOX_STEPS = 16
+BOX_TILES = ((2, 2), (4, 4))
+BOX_DEPTHS = (2, 4)
+
+
+def _plan_geometry(plan) -> dict:
+    """Box geometry of a compiled plan, recorded with every dry-run row."""
+    return {
+        "shape": list(plan.shape),
+        "chunk_axis": plan.chunk_axis,
+        "tiles": list(plan.tiles) if plan.tiles else [plan.d],
+        "time_depth": plan.k_off,
+    }
+
+
+def _box_records(ex, records, codecs, tile_grid=BOX_TILES,
+                 depths=BOX_DEPTHS) -> None:
+    from repro.core.compress import compress_plan
+    from repro.core.lower import lower
+    from repro.core.oocore import compile_box_plan
+    from repro.core.stencil import get_stencil
+
+    st = get_stencil(BOX_STENCIL)
+    for tiles in tile_grid:
+        for t in depths:
+            base = compile_box_plan(st, BOX_SHAPE, BOX_STEPS, tiles, t)
+            for codec in codecs:
+                plan = compress_plan(base, codec)
+                _, s = ex.execute(plan)
+                lowering = lower(plan).describe()
+                tag = "x".join(str(x) for x in tiles)
+                key = f"{BOX_STENCIL}/box_tb/tiles{tag}/t{t}/{codec}"
+                print(f"dryrun/{key},{len(plan)},"
+                      f"wire_gb={s.wire_bytes / 1e9:.2f} "
+                      f"odc_gb={s.buffer_bytes / 1e9:.2f} "
+                      f"kernels={s.kernel_calls} "
+                      f"redundancy={s.redundancy:.4f}")
+                records[key] = {
+                    "plan_ops": len(plan),
+                    "raw_bytes": s.transfer_bytes,
+                    "wire_bytes": s.wire_bytes,
+                    "h2d_wire_bytes": s.h2d_wire_bytes,
+                    "d2h_wire_bytes": s.d2h_wire_bytes,
+                    "buffer_bytes": s.buffer_bytes,
+                    "kernel_calls": s.kernel_calls,
+                    "redundant_elements": s.redundant_elements,
+                    "stage_count": lowering["stage_count"],
+                    "shape_buckets": lowering["shape_buckets"],
+                    "box": _plan_geometry(plan),
+                }
+
 
 def _sharded_records(ex, records) -> None:
     from repro.core.shard import compile_sharded
@@ -104,7 +170,8 @@ def _sharded_records(ex, records) -> None:
             }
 
 
-def dry_run(engines, codecs, json_path=None) -> None:
+def dry_run(engines, codecs, json_path=None, chunk_axis=0,
+            tile_grid=BOX_TILES, depths=BOX_DEPTHS) -> None:
     from repro.core.compress import compress_plan
     from repro.core.executor import DryRunExecutor
     from repro.core.lower import lower
@@ -118,7 +185,8 @@ def dry_run(engines, codecs, json_path=None) -> None:
     for name in PAPER_BENCHMARKS:
         d, s_tb = PAPER_CONFIG[name]
         for engine in engines:
-            base = paper_plan(engine, name, OOC_SZ, d, s_tb)
+            base = paper_plan(engine, name, OOC_SZ, d, s_tb,
+                              chunk_axis=chunk_axis)
             for codec in codecs:
                 plan = compress_plan(base, codec)
                 _, s = ex.execute(plan)
@@ -126,6 +194,8 @@ def dry_run(engines, codecs, json_path=None) -> None:
                 # buckets (= the kernel-compile ceiling), no execution
                 lowering = lower(plan).describe()
                 key = f"{name}/{engine}/{codec}"
+                if chunk_axis:
+                    key += f"/axis{chunk_axis}"
                 print(f"dryrun/{key},{len(plan)},"
                       f"h2d_gb={s.h2d_bytes / 1e9:.2f} "
                       f"d2h_gb={s.d2h_bytes / 1e9:.2f} "
@@ -145,10 +215,14 @@ def dry_run(engines, codecs, json_path=None) -> None:
                     "kernel_calls": s.kernel_calls,
                     "stage_count": lowering["stage_count"],
                     "shape_buckets": lowering["shape_buckets"],
+                    "box": _plan_geometry(plan),
                 }
-    # multi-chip (L2) sharded plans: ICI + ghost-wedge accounting, gated
-    # by check_regression.py next to the single-device byte records
-    _sharded_records(ex, records)
+    # 3-D box temporal-blocking plans (trapezoid aprons), then the
+    # multi-chip (L2) sharded plans: ICI + ghost-wedge accounting —
+    # both gated by check_regression.py next to the row byte records
+    if chunk_axis == 0:
+        _box_records(ex, records, codecs, tile_grid, depths)
+        _sharded_records(ex, records)
     if json_path:
         _write_json(records, json_path)
 
@@ -212,11 +286,24 @@ def main(argv=None) -> None:
                          "(auto | reference | pallas | pallas_db | mxu)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write dry-run/exec records as JSON")
+    ap.add_argument("--chunk-axis", type=int, default=0, metavar="A",
+                    help="streaming axis for the --dry-run engine sweep "
+                         "(0 = the paper's row chunking; 1 = column "
+                         "chunking of the same 2-D domains)")
+    ap.add_argument("--tile", default=None, metavar="T0,T1[,T2]",
+                    help="tile grid for the --dry-run box_tb sweep, e.g. "
+                         "'2,2' (default: the committed "
+                         f"{'/'.join('x'.join(map(str, t)) for t in BOX_TILES)} grids)")
+    ap.add_argument("--time-depth", default=None, metavar="T[,T...]",
+                    help="time depth(s) per H2D round trip for the "
+                         "--dry-run box_tb sweep (default: "
+                         f"{','.join(map(str, BOX_DEPTHS))})")
     args = ap.parse_args(argv)
 
     from repro.core.compress import CODECS
     from repro.core.executor import PLAN_EXECUTORS
-    from repro.core.oocore import ENGINES
+    from repro.core.oocore import ENGINES, compile_box_plan
+    from repro.core.stencil import get_stencil
     from repro.kernels.dispatch import KERNEL_IMPLS
 
     engines = _resolve_names(args.engine, ENGINES, "engine", ap)
@@ -224,8 +311,53 @@ def main(argv=None) -> None:
 
     if args.dry_run and args.exec_bench:
         ap.error("--dry-run and --exec are mutually exclusive")
+    box_flags = args.tile is not None or args.time_depth is not None
+    if (args.chunk_axis != 0 or box_flags) and not args.dry_run:
+        ap.error("--chunk-axis/--tile/--time-depth only apply to --dry-run "
+                 "(plan geometry knobs; the measured/exec paths run the "
+                 "committed configurations)")
+    if args.chunk_axis not in (0, 1):
+        ap.error(f"--chunk-axis must be 0 or 1 for the 2-D paper domains, "
+                 f"got {args.chunk_axis}")
+    if args.chunk_axis != 0 and box_flags:
+        ap.error("--tile/--time-depth sweep the box_tb engine on the 3-D "
+                 "workload; --chunk-axis reorients the 2-D row sweep — "
+                 "pick one")
+    tile_grid, depths = BOX_TILES, BOX_DEPTHS
+    if args.tile is not None:
+        try:
+            tiles = tuple(int(s) for s in args.tile.split(","))
+        except ValueError:
+            ap.error(f"--tile expects comma-separated integers, "
+                     f"got {args.tile!r}")
+        if not tiles or any(t < 1 for t in tiles) or len(tiles) > len(BOX_SHAPE):
+            ap.error(f"--tile needs 1..{len(BOX_SHAPE)} counts >= 1, "
+                     f"got {args.tile!r}")
+        tile_grid = (tiles,)
+    if args.time_depth is not None:
+        try:
+            depths = tuple(int(s) for s in args.time_depth.split(","))
+        except ValueError:
+            ap.error(f"--time-depth expects comma-separated integers, "
+                     f"got {args.time_depth!r}")
+        if not depths or any(t < 1 for t in depths):
+            ap.error(f"--time-depth needs positive integers, "
+                     f"got {args.time_depth!r}")
+    if box_flags:
+        # fail fast on infeasible geometry (apron deeper than a tile)
+        # instead of half-writing a record set
+        st = get_stencil(BOX_STENCIL)
+        for tiles in tile_grid:
+            for t in depths:
+                try:
+                    compile_box_plan(st, BOX_SHAPE, 1, tiles, t)
+                except ValueError as e:
+                    ap.error(f"--tile {','.join(map(str, tiles))} "
+                             f"--time-depth {t}: {e}")
     if args.dry_run:
-        dry_run(engines, codecs, json_path=args.json)
+        dry_run(engines, codecs, json_path=args.json,
+                chunk_axis=args.chunk_axis, tile_grid=tile_grid,
+                depths=depths)
         return
     if args.exec_bench:
         # the sharded executors interpret ShardedPlans, not the

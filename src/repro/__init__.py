@@ -1,1 +1,72 @@
-"""repro: SO2DR on TPU — see README.md / DESIGN.md."""
+"""repro: SO2DR on TPU — see README.md / DESIGN.md.
+
+Stable top-level API.  Everything a typical user touches is importable
+from ``repro`` directly and listed in ``__all__``:
+
+* ``Box`` — the N-D coordinate type every plan op is expressed in;
+* ``compile_plan`` / ``compile_plan_nd`` / ``compile_box_plan`` —
+  engine-to-plan entry points (2-D rows, N-D chunking, BoxTB temporal
+  blocking);
+* ``get_engine`` / ``get_executor`` — the planner and interpreter
+  registries;
+* ``autotune`` / ``autotune_box`` / ``autotune_sharded`` — dry-run
+  config sweeps under the Sec. III model;
+* ``compress_plan`` / ``get_codec`` — the transfer-codec rewrite pass;
+* ``StencilService`` / ``StencilJob`` — the persistent plan server.
+
+Deeper machinery keeps its module-level home (``repro.core.lower``,
+``repro.kernels.dispatch``, ``repro.core.distributed``, ...); those
+paths are documented in README.md and are stable too, but they are not
+re-exported here.
+"""
+from .core import (  # noqa: F401
+    Box,
+    ExecutionPlan,
+    ShardedPlan,
+    TransferStats,
+    Stencil,
+    get_stencil,
+    Hardware,
+    RTX3080_PAPER,
+    TPU_V5E,
+    compile_plan,
+    compile_plan_nd,
+    compile_box_plan,
+    compile_sharded,
+    get_engine,
+    get_executor,
+    get_codec,
+    compress_plan,
+    autotune,
+    autotune_box,
+    autotune_sharded,
+    run_reference,
+)
+from .serve import JobResult, StencilJob, StencilService  # noqa: F401
+
+__all__ = [
+    "Box",
+    "ExecutionPlan",
+    "ShardedPlan",
+    "TransferStats",
+    "Stencil",
+    "get_stencil",
+    "Hardware",
+    "RTX3080_PAPER",
+    "TPU_V5E",
+    "compile_plan",
+    "compile_plan_nd",
+    "compile_box_plan",
+    "compile_sharded",
+    "get_engine",
+    "get_executor",
+    "get_codec",
+    "compress_plan",
+    "autotune",
+    "autotune_box",
+    "autotune_sharded",
+    "run_reference",
+    "JobResult",
+    "StencilJob",
+    "StencilService",
+]

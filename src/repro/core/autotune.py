@@ -22,19 +22,23 @@ are pointless and it says so.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Tuple
+import itertools
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 from .analytic import EngineTimes, Hardware, model_times
 from .compress import compress_plan
 from .executor import DryRunExecutor
-from .oocore import compile_plan
+from .oocore import compile_box_plan, compile_plan
 from .params import CodeSpec, feasible
 from .plan import (
     BufferRead, BufferWrite, Compress, D2H, ExecutionPlan, FusedKernel, H2D,
 )
 from .stencil import Stencil
+from .tiling import split_steps
 
 __all__ = ["Choice", "autotune", "optimization_target",
+           "BoxChoice", "autotune_box", "trapezoid_redundant_elements",
            "ShardedChoice", "autotune_sharded",
            "StageCost", "stage_costs", "pipeline_makespan",
            "predicted_makespan"]
@@ -148,6 +152,117 @@ def autotune(
                                 times=t,
                                 kernel_impl=impl, tile=tile,
                             ))
+    out.sort(key=lambda c: c.time_s)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class BoxChoice:
+    """One ranked BoxTB configuration: tile grid x time depth (+ codec)."""
+
+    tiles: Tuple[int, ...]
+    time_depth: int
+    k_on: int
+    codec: str
+    time_s: float
+    bottleneck: str          # "transfer" | "kernel"
+    times: EngineTimes
+    redundant_elements: int  # trapezoid-apron overcompute, plan-derived
+    redundancy: float        # redundant / exact
+
+    @property
+    def config(self):
+        return dict(engine="box_tb", tiles=self.tiles,
+                    time_depth=self.time_depth, k_on=self.k_on,
+                    codec=self.codec)
+
+
+def trapezoid_redundant_elements(st: Stencil, shape: Sequence[int],
+                                 n_steps: int, tiles: Sequence[int],
+                                 time_depth: int) -> int:
+    """Closed-form redundant element-updates of a BoxTB schedule.
+
+    Each round of ``k`` steps computes, per tile and per step ``s``
+    (counting down, ``s = k-1`` last), an interior box whose extent along
+    axis ``a`` is ``e_a + (k-1-s) * c_a * r`` where ``e_a`` is the tile's
+    owned interior extent and ``c_a`` counts the tile's non-frame sides
+    on that axis (0, 1, or 2) — the trapezoid: the apron starts ``k*r``
+    deep per open side and loses ``r`` per step until only the owned box
+    remains.  Summing the box volumes over steps, tiles, and rounds and
+    subtracting the exact count ``n * prod(S_a - 2r)`` gives the
+    redundancy the plan's :class:`~repro.core.plan.TransferStats` must
+    report (property-tested in ``tests/test_box_tb.py``)."""
+    r = st.radius
+    nd = len(shape)
+    tiles = tuple(int(t) for t in tiles) + (1,) * (nd - len(tiles))
+    if len(tiles) != nd:
+        raise ValueError(f"tiles {tiles} over-ranks shape {tuple(shape)}")
+    sizes = []   # per-axis near-even interior split (same as make_chunk_plan)
+    for a in range(nd):
+        interior, d = shape[a] - 2 * r, tiles[a]
+        sizes.append([interior // d + (1 if i < interior % d else 0)
+                      for i in range(d)])
+    computed = 0
+    for k in split_steps(n_steps, time_depth):
+        for multi in itertools.product(*(range(t) for t in tiles)):
+            base = [sizes[a][multi[a]] for a in range(nd)]
+            open_sides = [(multi[a] != 0) + (multi[a] != tiles[a] - 1)
+                          for a in range(nd)]
+            for s in range(k):
+                computed += math.prod(
+                    base[a] + (k - 1 - s) * open_sides[a] * r
+                    for a in range(nd))
+    exact = n_steps * math.prod(s - 2 * r for s in shape)
+    return computed - exact
+
+
+def autotune_box(
+    st: Stencil,
+    shape: Sequence[int],
+    n_steps: int,
+    hw: Hardware,
+    tile_grid: Iterable[Sequence[int]] = ((1, 1), (2, 2), (4, 4)),
+    time_depth_grid: Iterable[int] = (1, 2, 4),
+    k_on_grid: Iterable[int] = (1,),
+    codecs: Iterable[str] = ("identity",),
+    b_elem: int = 4,
+) -> List[BoxChoice]:
+    """Rank BoxTB tile grids x time depths by modeled overlapped time
+    (best first) — the box-plan companion of :func:`autotune`.
+
+    Every candidate compiles its full :class:`~repro.core.plan.
+    ExecutionPlan` via :func:`~repro.core.oocore.compile_box_plan`
+    (infeasible geometry — an apron deeper than the smallest tile — is
+    skipped exactly like the row sweep skips infeasible ``k_off``),
+    rewrites it per codec, and is costed by the dry-run executor +
+    Sec. III model.  The trade the ranking exposes: deeper ``time_depth``
+    divides the H2D/D2H rounds by ``t`` while the trapezoid aprons grow
+    the kernel term by the redundancy reported per choice — the N-D
+    out-of-core analogue of the sharded engine's ``k_ici`` sweep."""
+    out: List[BoxChoice] = []
+    for tiles in tile_grid:
+        for t in time_depth_grid:
+            for k_on in k_on_grid:
+                try:
+                    base = compile_box_plan(st, shape, n_steps, tiles, t,
+                                            k_on=k_on, itemsize=b_elem)
+                except ValueError:
+                    continue
+                for codec in codecs:
+                    try:
+                        plan = compress_plan(base, codec)
+                    except ValueError:
+                        continue   # codec can't handle this itemsize
+                    _, stats = DryRunExecutor().execute(plan)
+                    tm = model_times(stats, hw)
+                    out.append(BoxChoice(
+                        tiles=tuple(int(x) for x in tiles), time_depth=t,
+                        k_on=k_on, codec=codec,
+                        time_s=tm.total_overlapped(hw.n_streams),
+                        bottleneck=_bottleneck(tm, hw.n_streams),
+                        times=tm,
+                        redundant_elements=stats.redundant_elements,
+                        redundancy=stats.redundancy))
     out.sort(key=lambda c: c.time_s)
     return out
 

@@ -250,8 +250,7 @@ def compress_plan(plan: ExecutionPlan, codec: Union[str, Codec]) -> ExecutionPla
                 direction=direction,
                 raw_nbytes=op.nbytes,
                 wire_nbytes=c.wire_nbytes(op.nbytes, plan.itemsize),
-                host_lo=op.host_lo,
-                host_hi=op.host_hi,
+                box=op.box,
                 round=op.round,
                 chunk=op.chunk,
             )

@@ -54,7 +54,7 @@ from .plan import (
     BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
     FusedKernel, H2D, HostCommit, ShardedPlan, TransferStats,
 )
-from .reference import multi_step_band
+from .reference import multi_step_band, multi_step_box
 
 __all__ = [
     "EagerExecutor", "DoubleBufferedExecutor", "DryRunExecutor",
@@ -78,11 +78,11 @@ class _StagedWrite:
     Compress and its Decompress; committing a pending entry is a plan
     bug."""
 
-    __slots__ = ("host_lo", "host_hi", "rows", "codec", "pending")
+    __slots__ = ("box", "rows", "codec", "pending")
 
-    def __init__(self, host_lo, host_hi, rows, codec=None, pending=False):
-        self.host_lo, self.host_hi = host_lo, host_hi
-        self.rows = rows          # async jnp handle (or np rows)
+    def __init__(self, box, rows, codec=None, pending=False):
+        self.box = box            # destination host Box
+        self.rows = rows          # async jnp handle (or np box payload)
         self.codec = codec        # codec name; round trip runs at commit
         self.pending = pending
 
@@ -107,9 +107,9 @@ class _DeviceState:
     already the copy — while wire-byte accounting (plan-derived) is
     untouched."""
 
-    def __init__(self, host: np.ndarray, fused_step: FusedStep):
+    def __init__(self, host: np.ndarray, fused_step: Optional[FusedStep]):
         self.host = host
-        self.fused_step = fused_step
+        self.fused_step = fused_step   # None = reference (banded path only)
         self.regs: Dict[str, jnp.ndarray] = {}
         self.bufs: Dict[str, jnp.ndarray] = {}
         self.staged: List[_StagedWrite] = []
@@ -121,13 +121,13 @@ class _DeviceState:
     def issue_h2d(self, op: H2D) -> None:
         if op.reg in self.h2d_wire:
             return   # wire hop already happened at Compress time
-        self.regs[op.reg] = jnp.asarray(self.host[op.host_lo:op.host_hi])
+        self.regs[op.reg] = jnp.asarray(self.host[op.box.slices()])
 
     def _compress(self, op: Compress) -> None:
         if op.codec == "identity":
             return   # fast path: the transfer op itself is the pure copy
         if op.direction == "h2d":
-            rows = self.host[op.host_lo:op.host_hi]
+            rows = self.host[op.box.slices()]
             payload = get_codec(op.codec).encode(rows)
             # the wire hop: encoded bytes (not raw rows) go to the device
             self.h2d_wire[op.reg] = (jnp.asarray(payload), rows.shape, rows.dtype)
@@ -143,8 +143,7 @@ class _DeviceState:
             self.regs[op.reg] = jnp.asarray(decoded)
         else:
             entry = self.staged[-1]
-            assert entry.pending and \
-                (entry.host_lo, entry.host_hi) == (op.host_lo, op.host_hi), \
+            assert entry.pending and entry.box == op.box, \
                 "Decompress does not match the staged D2H"
             entry.pending = False   # round trip scheduled; runs at commit
 
@@ -156,20 +155,30 @@ class _DeviceState:
         elif isinstance(op, Decompress):
             self._decompress(op)
         elif isinstance(op, BufferWrite):
-            self.bufs[op.buf] = self.regs[op.reg][op.reg_lo:op.reg_hi]
+            self.bufs[op.buf] = self.regs[op.reg][op.reg_box.slices()]
         elif isinstance(op, BufferRead):
             shared = self.bufs.pop(op.buf)
             self.regs[op.reg] = jnp.concatenate(
-                [shared, self.regs.pop(op.src)], axis=0)
+                [shared, self.regs.pop(op.src)], axis=op.axis)
         elif isinstance(op, FusedKernel):
-            self.regs[op.reg] = self.fused_step(
-                self.regs[op.reg], op.stencil, op.steps,
-                keep_top=op.keep_top, keep_bottom=op.keep_bottom)
+            band = self.regs[op.reg]
+            # banded = a classic 2-D row band (full width, frame columns
+            # along): the registered fused-step kernels apply.  Anything
+            # else (3-D tiles, column chunks) runs the N-D reference.
+            if len(op.shape_in) == 2 and op.keep_lo[1] and op.keep_hi[1]:
+                fn = self.fused_step or multi_step_band
+                self.regs[op.reg] = fn(
+                    band, op.stencil, op.steps,
+                    keep_top=op.keep_lo[0], keep_bottom=op.keep_hi[0])
+            else:
+                self.regs[op.reg] = multi_step_box(
+                    band, op.stencil, op.steps,
+                    keep_lo=op.keep_lo, keep_hi=op.keep_hi)
         elif isinstance(op, D2H):
             band = self.regs.pop(op.reg)   # last use of the register
             codec = self.d2h_codec.pop(op.reg, None)
             self.staged.append(_StagedWrite(
-                op.host_lo, op.host_hi, rows=band[op.reg_lo:op.reg_hi],
+                op.box, rows=band[op.reg_box.slices()],
                 codec=codec, pending=codec is not None))
         elif isinstance(op, HostCommit):
             self.commit()
@@ -187,7 +196,7 @@ class _DeviceState:
                 # the wire round trip: device-side encode, host-side decode
                 codec = get_codec(entry.codec)
                 rows = codec.decode(codec.encode(rows), rows.shape, rows.dtype)
-            self.host[entry.host_lo:entry.host_hi] = rows
+            self.host[entry.box.slices()] = rows
         self.staged.clear()
 
 
@@ -277,8 +286,7 @@ class EagerExecutor(_LoweredExecutorBase):
     _pipeline = False
 
     def _execute_legacy(self, plan, x):
-        state = _DeviceState(validate_domain(plan, x),
-                             self.fused_step or multi_step_band)
+        state = _DeviceState(validate_domain(plan, x), self.fused_step)
         for op in plan.ops:
             state.issue(op)
         state.commit()   # no-op unless a planner forgot the final barrier
@@ -302,8 +310,7 @@ class DoubleBufferedExecutor(_LoweredExecutorBase):
     _pipeline = True
 
     def _execute_legacy(self, plan, x):
-        state = _DeviceState(validate_domain(plan, x),
-                             self.fused_step or multi_step_band)
+        state = _DeviceState(validate_domain(plan, x), self.fused_step)
         stages = plan.stages()
         prefetched: set = set()
         for j, (key, ops) in enumerate(stages):

@@ -272,22 +272,22 @@ class _Runtime:
         # needed — closures only ever index their bound slots)
         self.regs: List = regs if regs is not None else [None] * n_regs
         self.bufs: List = bufs if bufs is not None else [None] * n_bufs
-        # staged D2H rows: (host_lo, host_hi, device rows, codec name|None)
+        # staged D2H boxes: (host slice tuple, device payload, codec|None)
         self.staged: List[tuple] = []
         # reg slot -> (payload, shape, dtype) between a non-identity
         # Compress(h2d) and its Decompress
         self.wire: Dict[int, tuple] = {}
 
     def commit(self) -> None:
-        for _, _, rows, _ in self.staged:
+        for _, rows, _ in self.staged:
             jax.block_until_ready(rows)
-        for host_lo, host_hi, rows, codec_name in self.staged:
+        for sl, rows, codec_name in self.staged:
             rows = np.asarray(rows)
             if codec_name is not None:
                 # the wire round trip: device-side encode, host-side decode
                 codec = get_codec(codec_name)
                 rows = codec.decode(codec.encode(rows), rows.shape, rows.dtype)
-            self.host[host_lo:host_hi] = rows
+            self.host[sl] = rows
         self.staged.clear()
 
 
@@ -309,9 +309,9 @@ def check_domain(plan, x: np.ndarray) -> None:
     Shared by every executor entry point (including the shard_map
     backend, which needs no mutable copy), so all backends reject
     identically by construction."""
-    if x.shape != (plan.Y, plan.X):
+    if tuple(x.shape) != tuple(plan.shape):
         raise ValueError(f"domain {x.shape} does not match plan "
-                         f"({plan.Y}, {plan.X})")
+                         f"{tuple(plan.shape)}")
     if x.dtype.itemsize != plan.itemsize:
         raise ValueError(f"dtype itemsize {x.dtype.itemsize} does not match "
                          f"plan itemsize {plan.itemsize}")
@@ -480,12 +480,21 @@ class _SlotAllocator:
         return slot
 
 
+def _is_banded(op: FusedKernel) -> bool:
+    """True for a classic 2-D row band (full width, frame columns along)
+    — the shape the registered fused-step kernels and the bucketing pass
+    understand.  Anything else (3-D tiles, column chunks) lowers through
+    the N-D reference binder."""
+    return len(op.shape_in) == 2 and op.keep_lo[1] and op.keep_hi[1]
+
+
 def _bucket_heights(plan: ExecutionPlan, bucket: bool,
                     registry: Optional[BucketRegistry] = None,
                     ) -> Dict[tuple, int]:
     """Per-group padded band heights: one bucket per ``(stencil, steps,
     keep_top, keep_bottom)`` group (its max h_in).  Both-sides-framed
-    bands are excluded — there is no frame-free side to pad.  A
+    bands are excluded — there is no frame-free side to pad — and so are
+    non-banded (N-D box) kernels, which have no single pad axis.  A
     :class:`BucketRegistry` lifts each group's height to the smallest
     already-compiled cross-plan bucket that fits, so warm-service jobs
     with unseen shapes reuse existing kernel signatures."""
@@ -493,9 +502,10 @@ def _bucket_heights(plan: ExecutionPlan, bucket: bool,
     if not bucket:
         return buckets
     for op in plan.ops:
-        if isinstance(op, FusedKernel) and not (op.keep_top and op.keep_bottom):
-            key = (op.stencil, op.steps, op.keep_top, op.keep_bottom)
-            buckets[key] = max(buckets.get(key, 0), op.h_in)
+        if isinstance(op, FusedKernel) and _is_banded(op) \
+                and not (op.keep_lo[0] and op.keep_hi[0]):
+            key = (op.stencil, op.steps, op.keep_lo[0], op.keep_hi[0])
+            buckets[key] = max(buckets.get(key, 0), op.shape_in[0])
     if registry is not None:
         for key, h in buckets.items():
             buckets[key] = registry.resolve(
@@ -505,19 +515,20 @@ def _bucket_heights(plan: ExecutionPlan, bucket: bool,
 
 def _bind_kernel(slot: int, op: FusedKernel, bucket_h: int, impl_name: str,
                  fn: Callable, cache: KernelCache, itemsize: int) -> Callable:
-    pad = bucket_h - op.h_in
+    h_in, width = op.shape_in
+    pad = bucket_h - h_in
+    kt, kb = op.keep_lo[0], op.keep_hi[0]
     # pad on the frame-free side; slice the true output back out
-    pad_top = op.keep_bottom and not op.keep_top
+    pad_top = kb and not kt
     # id(fn) keeps the signature count honest when the same impl name
     # resolves to a different callable (swapped fused_step, new tile):
     # the cache entry holds fn alive, so its id cannot be reused while
     # the key is live.  The callable itself is always the freshly
     # resolved fn — the cache only counts, it never serves stale code.
-    key = (impl_name, id(fn), op.stencil, op.steps, op.keep_top,
-           op.keep_bottom, bucket_h, op.width, itemsize)
+    key = (impl_name, id(fn), op.stencil, op.steps, kt, kb,
+           bucket_h, width, itemsize)
     name, steps = op.stencil, op.steps
-    kt, kb = op.keep_top, op.keep_bottom
-    h_out = op.h_out
+    h_out = op.shape_out[0]
 
     def run(rt):
         cache.lookup(key, lambda: fn)
@@ -529,6 +540,27 @@ def _bind_kernel(slot: int, op: FusedKernel, bucket_h: int, impl_name: str,
         if pad:
             out = out[out.shape[0] - h_out:] if pad_top else out[:h_out]
         rt.regs[slot] = out
+
+    return run
+
+
+def _bind_kernel_nd(slot: int, op: FusedKernel, cache: KernelCache,
+                    itemsize: int) -> Callable:
+    """Bind a non-banded (N-D box) FusedKernel to the reference kernel.
+
+    No padding/bucketing: each distinct ``(shape_in, keeps)`` is its own
+    jit signature, and the cache key mirrors that so ``shape_buckets``
+    keeps counting the true compile ceiling."""
+    from .reference import multi_step_box
+
+    key = ("reference_nd", op.stencil, op.steps, op.keep_lo, op.keep_hi,
+           op.shape_in, itemsize)
+    name, steps, kl, kh = op.stencil, op.steps, op.keep_lo, op.keep_hi
+
+    def run(rt):
+        cache.lookup(key, lambda: multi_step_box)
+        rt.regs[slot] = multi_step_box(rt.regs[slot], name, steps,
+                                       keep_lo=kl, keep_hi=kh)
 
     return run
 
@@ -558,6 +590,7 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
     bufs = _SlotAllocator()
     # (stencil, steps) -> (impl_name, callable); resolved once at lower time
     kernels: Dict[tuple, Tuple[str, Callable]] = {}
+    nd_impls: set = set()               # "reference_nd" when box kernels bind
     # statically tracked codec context between a Compress and its transfer
     pending_h2d: Dict[str, str] = {}    # reg -> codec (non-identity, h2d)
     pending_d2h: Dict[str, str] = {}    # reg -> codec (non-identity, d2h)
@@ -592,10 +625,10 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
                 else:
                     slot = regs.alloc(op.reg)   # H2D binds as the wire hop
                     pending_h2d[op.reg] = op.codec
-                    lo, hi = op.host_lo, op.host_hi
+                    sl = op.box.slices()
 
-                    def run(rt, _s=slot, _lo=lo, _hi=hi, _c=codec):
-                        rows = rt.host[_lo:_hi]
+                    def run(rt, _s=slot, _sl=sl, _c=codec):
+                        rows = rt.host[_sl]
                         rt.wire[_s] = (jnp.asarray(_c.encode(rows)),
                                        rows.shape, rows.dtype)
 
@@ -626,19 +659,19 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
                 emit(key, "H2D", _noop)
             else:
                 slot = regs.alloc(op.reg)
-                lo, hi = op.host_lo, op.host_hi
+                sl = op.box.slices()
 
-                def run(rt, _s=slot, _lo=lo, _hi=hi):
-                    rt.regs[_s] = jnp.asarray(rt.host[_lo:_hi])
+                def run(rt, _s=slot, _sl=sl):
+                    rt.regs[_s] = jnp.asarray(rt.host[_sl])
 
                 emit(key, "H2D", run)
         elif isinstance(op, BufferWrite):
             rslot = regs.get(op.reg)
             bslot = bufs.alloc(op.buf)
-            lo, hi = op.reg_lo, op.reg_hi
+            sl = op.reg_box.slices()
 
-            def run(rt, _b=bslot, _r=rslot, _lo=lo, _hi=hi):
-                rt.bufs[_b] = rt.regs[_r][_lo:_hi]
+            def run(rt, _b=bslot, _r=rslot, _sl=sl):
+                rt.bufs[_b] = rt.regs[_r][_sl]
 
             emit(key, "BufferWrite", run)
         elif isinstance(op, BufferRead):
@@ -646,17 +679,26 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
             src_slot = regs.free(op.src, chunk_ordinal)  # src dies here
             dst_slot = regs.alloc(op.reg)
 
-            def run(rt, _b=bslot, _src=src_slot, _dst=dst_slot):
+            def run(rt, _b=bslot, _src=src_slot, _dst=dst_slot, _ax=op.axis):
                 shared = rt.bufs[_b]
                 rt.bufs[_b] = None
                 src = rt.regs[_src]
                 if _src != _dst:
                     rt.regs[_src] = None
-                rt.regs[_dst] = jnp.concatenate([shared, src], axis=0)
+                rt.regs[_dst] = jnp.concatenate([shared, src], axis=_ax)
 
             emit(key, "BufferRead", run)
         elif isinstance(op, FusedKernel):
             slot = regs.get(op.reg)
+            if not _is_banded(op):
+                # N-D box band: reference kernel, one signature per
+                # distinct (shape, keeps)
+                signatures.add((op.stencil, op.steps, op.keep_lo,
+                                op.keep_hi, op.shape_in))
+                nd_impls.add("reference_nd")
+                emit(key, "FusedKernel",
+                     _bind_kernel_nd(slot, op, cache, plan.itemsize))
+                continue
             kkey = (op.stencil, op.steps)
             if kkey not in kernels:
                 if fused_step is not None:
@@ -664,8 +706,8 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
                 else:
                     kernels[kkey] = select_kernel(op.stencil, op.steps, policy)
             impl_name, fn = kernels[kkey]
-            gkey = (op.stencil, op.steps, op.keep_top, op.keep_bottom)
-            bucket_h = buckets.get(gkey, op.h_in)
+            gkey = (op.stencil, op.steps, op.keep_lo[0], op.keep_hi[0])
+            bucket_h = buckets.get(gkey, op.shape_in[0])
             signatures.add(gkey + (bucket_h,))
             emit(key, "FusedKernel",
                  _bind_kernel(slot, op, bucket_h, impl_name, fn, cache,
@@ -673,19 +715,18 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
         elif isinstance(op, D2H):
             slot = regs.free(op.reg, chunk_ordinal)   # last use of the register
             codec_name = pending_d2h.pop(op.reg, None)
-            rlo, rhi, hlo, hhi = op.reg_lo, op.reg_hi, op.host_lo, op.host_hi
+            rsl, hsl = op.reg_box.slices(), op.box.slices()
 
-            def run(rt, _s=slot, _rlo=rlo, _rhi=rhi, _hlo=hlo, _hhi=hhi,
-                    _codec=codec_name):
+            def run(rt, _s=slot, _rsl=rsl, _hsl=hsl, _codec=codec_name):
                 band = rt.regs[_s]
                 rt.regs[_s] = None
-                rt.staged.append((_hlo, _hhi, band[_rlo:_rhi], _codec))
+                rt.staged.append((_hsl, band[_rsl], _codec))
 
             emit(key, "D2H", run)
         else:  # pragma: no cover - planner/lowering version skew
             raise TypeError(f"unknown op {op!r}")
 
-    impl_names = sorted({name for name, _ in kernels.values()})
+    impl_names = sorted({name for name, _ in kernels.values()} | nd_impls)
     lowered_stages = []
     for key, ops in stages:
         ops = tuple(ops)
@@ -729,13 +770,13 @@ class _ShardRuntime:
         self.host = host
         self.bands: List = [None] * n_slots
         self.mail: Dict[tuple, jnp.ndarray] = {}
-        self.staged: List[tuple] = []
+        self.staged: List[tuple] = []   # (host slice tuple, device band)
 
     def commit(self) -> None:
-        for _, _, _, _, rows in self.staged:
+        for _, rows in self.staged:
             jax.block_until_ready(rows)
-        for y0, y1, x0, x1, rows in self.staged:
-            self.host[y0:y1, x0:x1] = np.asarray(rows)
+        for sl, rows in self.staged:
+            self.host[sl] = np.asarray(rows)
         self.staged.clear()
 
 
@@ -856,10 +897,10 @@ def lower_sharded(plan: ShardedPlan,
         for op in ops:
             if isinstance(op, ShardLoad):
                 slot = regs.alloc(f"band:{op.rank}")
-                y0, y1, x0, x1 = op.y0, op.y1, op.x0, op.x1
+                sl = op.box.slices()
 
-                def run(rt, _s=slot, _y0=y0, _y1=y1, _x0=x0, _x1=x1):
-                    rt.bands[_s] = jnp.asarray(rt.host[_y0:_y1, _x0:_x1])
+                def run(rt, _s=slot, _sl=sl):
+                    rt.bands[_s] = jnp.asarray(rt.host[_sl])
 
                 bound.append((_TAG["ShardLoad"], run))
             elif isinstance(op, HaloSend):
@@ -904,12 +945,12 @@ def lower_sharded(plan: ShardedPlan,
                               _bind_shard_kernel(slot, op, plan, cache)))
             elif isinstance(op, ShardStore):
                 slot = regs.free(f"band:{op.rank}", ordinal)
-                y0, y1, x0, x1 = op.y0, op.y1, op.x0, op.x1
+                sl = op.box.slices()
 
-                def run(rt, _s=slot, _y0=y0, _y1=y1, _x0=x0, _x1=x1):
+                def run(rt, _s=slot, _sl=sl):
                     band = rt.bands[_s]
                     rt.bands[_s] = None
-                    rt.staged.append((_y0, _y1, _x0, _x1, band))
+                    rt.staged.append((_sl, band))
 
                 bound.append((_TAG["ShardStore"], run))
             else:  # pragma: no cover - planner/lowering version skew

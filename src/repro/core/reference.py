@@ -18,13 +18,16 @@ __all__ = [
     "run_reference",
     "step_band",
     "multi_step_band",
+    "step_band_nd",
+    "multi_step_box",
 ]
 
 
 def step_domain(x: jnp.ndarray, st: Stencil) -> jnp.ndarray:
-    """One time step on the full framed domain: (Y, X) -> (Y, X)."""
+    """One time step on the full framed domain (shape-preserving)."""
     r = st.radius
-    return x.at[..., r:-r, r:-r].set(st.step_valid(x))
+    idx = (Ellipsis,) + (slice(r, -r),) * st.ndim
+    return x.at[idx].set(st.step_valid(x))
 
 
 @functools.partial(jax.jit, static_argnames=("name", "n"))
@@ -79,4 +82,46 @@ def multi_step_band(
     st = get_stencil(name)
     for _ in range(steps):
         band = step_band(band, st, keep_top, keep_bottom)
+    return band
+
+
+def step_band_nd(
+    band: jnp.ndarray, st: Stencil, keep_lo, keep_hi
+) -> jnp.ndarray:
+    """One step on an N-D box band (the :func:`step_band` generalization).
+
+    Every axis carries ``r`` apron cells per side; the output drops each
+    side's apron unless that side is the domain frame (``keep_lo[a]`` /
+    ``keep_hi[a]``), in which case the frame cells pass through unchanged:
+
+        out extent[a] = S[a] - 2r + (keep_lo[a] + keep_hi[a]) * r
+    """
+    r = st.radius
+    valid = st.step_valid(band)
+    full = band.at[tuple(slice(r, s - r) for s in band.shape)].set(valid)
+    crop = tuple(
+        slice(0 if kl else r, s if kh else s - r)
+        for s, kl, kh in zip(band.shape, keep_lo, keep_hi)
+    )
+    return full[crop]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("name", "steps", "keep_lo", "keep_hi"))
+def multi_step_box(
+    band: jnp.ndarray,
+    name: str,
+    steps: int,
+    keep_lo: tuple = (),
+    keep_hi: tuple = (),
+) -> jnp.ndarray:
+    """``steps`` fused time steps on an N-D box band.
+
+    The reference kernel for non-banded :class:`~repro.core.plan.FusedKernel`
+    ops (3-D tiles, column chunks): compute volume shrinks ``r`` per step
+    on every non-frame side, matching
+    :func:`repro.core.plan.fused_box_geometry`."""
+    st = get_stencil(name)
+    for _ in range(steps):
+        band = step_band_nd(band, st, keep_lo, keep_hi)
     return band

@@ -123,8 +123,7 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
     p = phase("load")
     for sh in shards:
         streams[sh.rank].append(ShardLoad(
-            rank=sh.rank, y0=sh.y0, y1=sh.y1, x0=sh.x0, x1=sh.x1,
-            nbytes=shard_bytes, round=0, phase=p))
+            rank=sh.rank, box=sh.box, nbytes=shard_bytes, round=0, phase=p))
 
     for rnd in range(rounds):
         # row halos of the owned band, then column halos of the
@@ -187,8 +186,8 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
     p = phase("store")
     for sh in shards:
         streams[sh.rank].append(ShardStore(
-            rank=sh.rank, y0=sh.y0, y1=sh.y1, x0=sh.x0, x1=sh.x1,
-            nbytes=shard_bytes, round=rounds - 1, phase=p))
+            rank=sh.rank, box=sh.box, nbytes=shard_bytes,
+            round=rounds - 1, phase=p))
 
     exact = n * (Y - 2 * r) * (X - 2 * r)
     return ShardedPlan(

@@ -50,22 +50,25 @@ def star_coeffs(radius: int) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class Stencil:
-    """A 2-D stencil template.
+    """An N-D stencil template (``ndim`` trailing spatial axes).
 
-    ``step_valid`` maps an ``(H, W)`` array to the ``(H-2r, W-2r)`` "valid"
-    region — the kernel-level primitive everything else is built from.
+    ``step_valid`` maps an array to its "valid" region — every spatial
+    extent shrinks by ``2r`` — the kernel-level primitive everything else
+    is built from.
     """
 
     name: str
     radius: int
-    kind: str                    # "box" | "star" | "gradient"
+    kind: str                    # "box" | "star" | "gradient" | "heat"
     flops_per_elem: int          # arithmetic intensity (paper Table III)
     points: int                  # taps read per output element
     _step_valid: Callable[[jnp.ndarray], jnp.ndarray]
-    coeffs: np.ndarray | None = None   # (2r+1, 2r+1) for linear stencils
+    coeffs: np.ndarray | None = None   # (2r+1, 2r+1) for linear 2-D stencils
+    ndim: int = 2                # spatial rank of the template
 
     def step_valid(self, x: jnp.ndarray) -> jnp.ndarray:
-        """One time step on the valid interior: (H, W) -> (H-2r, W-2r)."""
+        """One time step on the valid interior: every spatial extent
+        shrinks by ``2r`` (e.g. ``(H, W) -> (H-2r, W-2r)``)."""
         return self._step_valid(x)
 
     @property
@@ -146,10 +149,37 @@ def _make_star(radius: int) -> Stencil:
     )
 
 
+def _heat3d_step(x: jnp.ndarray) -> jnp.ndarray:
+    """3-D 7-point heat (star) stencil: explicit Euler Laplacian update.
+
+    ``c + dt * (sum of 6 face neighbours - 6c)`` with ``dt = 0.1`` —
+    weights sum to 1 and stay non-negative, so iterates remain bounded.
+    """
+    c = x[..., 1:-1, 1:-1, 1:-1]
+    lap = (
+        x[..., :-2, 1:-1, 1:-1] + x[..., 2:, 1:-1, 1:-1]
+        + x[..., 1:-1, :-2, 1:-1] + x[..., 1:-1, 2:, 1:-1]
+        + x[..., 1:-1, 1:-1, :-2] + x[..., 1:-1, 1:-1, 2:]
+    )
+    dt = jnp.asarray(0.1, x.dtype)
+    six = jnp.asarray(6.0, x.dtype)
+    return c + dt * (lap - six * c)
+
+
 REGISTRY: Dict[str, Stencil] = {}
 for _r in (1, 2, 3, 4):
     REGISTRY[f"box2d{_r}r"] = _make_box(_r)
     REGISTRY[f"star2d{_r}r"] = _make_star(_r)
+REGISTRY["heat3d1r"] = Stencil(
+    name="heat3d1r",
+    radius=1,
+    kind="heat",
+    flops_per_elem=13,
+    points=7,
+    _step_valid=_heat3d_step,
+    coeffs=None,
+    ndim=3,
+)
 REGISTRY["gradient2d"] = Stencil(
     name="gradient2d",
     radius=1,

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -274,26 +275,32 @@ def modeled_kernel_time(plan, hw, impl_name: str,
             return None
         r, m = st.radius, op.steps
         vpu_flops += op.flops
+        banded = len(op.shape_in) == 2 and op.keep_lo[1] and op.keep_hi[1]
         if impl_name == "reference":
-            # per-step band read + write: heights shrink r/step per
-            # non-frame side, mirroring fused_kernel_geometry
-            keep = (int(op.keep_top) + int(op.keep_bottom)) * r
-            h = op.h_in
+            # per-step band read + write: extents shrink r/step per
+            # non-frame side, mirroring fused_box_geometry
+            cur = list(op.shape_in)
             for _ in range(m):
-                h_next = h - 2 * r + keep
-                mem_bytes += (h + h_next) * op.width * itemsize
-                h = h_next
+                nxt = [c - 2 * r + (int(kl) + int(kh)) * r
+                       for c, kl, kh in zip(cur, op.keep_lo, op.keep_hi)]
+                mem_bytes += (math.prod(cur) + math.prod(nxt)) * itemsize
+                cur = nxt
+        elif not banded:
+            # the tiled 2-D kernels only run classic row bands; N-D box
+            # plans are reference-only for now
+            return None
         else:
-            ty, tx = _clamped_tile(impl, tile, op.h_out, op.width)
+            h_out, width = op.shape_out[0], op.shape_in[1]
+            ty, tx = _clamped_tile(impl, tile, h_out, width)
             if ty <= 0 or tx <= 0:
                 return None
             apron_bytes = (ty + 2 * m * r) * (tx + 2 * m * r) * itemsize
             c_vmem = getattr(hw, "c_vmem", 0)
             if c_vmem and apron_bytes * impl.vmem_slots > c_vmem:
                 return None
-            n_tiles = ceil_div(op.h_out, ty) * ceil_div(op.width, tx)
+            n_tiles = ceil_div(h_out, ty) * ceil_div(width, tx)
             # reads: one apron'd tile per output tile; writes: exact band
-            mem_bytes += n_tiles * apron_bytes + op.h_out * op.width * itemsize
+            mem_bytes += n_tiles * apron_bytes + h_out * width * itemsize
             if impl_name == "mxu":
                 n = 2 * r + 1
                 mxu_flops += op.elements * n * 2 * (tx + 2 * r)

@@ -1,0 +1,293 @@
+"""The box-IR redesign's compatibility contract.
+
+The plan IR moved from row ranges to N-D :class:`~repro.core.plan.Box`
+coordinates.  These tests pin the redesign's promises:
+
+* **bit-identity on the degenerate case** — 1-axis box chunking must
+  reproduce the pre-redesign row planner exactly.  The golden fixture
+  ``tests/data/golden_row_plans.json`` was generated *by the row-range
+  code before the migration* (engines x stencils x codecs: full op
+  schedules with row fields, TransferStats, breakdown, stage keys); the
+  current planner must match it field for field, including infeasible
+  configs' error messages;
+* **axis generality** — a column-chunked plan of the transposed domain
+  is the transpose of the row-chunked plan, in both geometry and
+  executed output;
+* **deprecation shims** — the old row accessors (``host_lo``/
+  ``reg_hi``/``rows``/``keep_top``/...) still answer, with a
+  ``DeprecationWarning``, and agree with the boxes they delegate to;
+* **stable top-level API** — everything ``repro.__all__`` promises (and
+  the names README leans on) resolves.
+"""
+import dataclasses
+import json
+import math
+import os
+import re
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as stst
+
+from repro.core.executor import EagerExecutor
+from repro.core.oocore import compile_plan, compile_plan_nd
+from repro.core.plan import (
+    Box, BufferRead, BufferWrite, Compress, D2H, Decompress, FusedKernel,
+    H2D, HostCommit, ShardLoad,
+)
+from repro.core.reference import run_reference
+from repro.core.stencil import get_stencil
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_row_plans.json")
+
+ENGINE_NAMES = ("incore", "naive_tb", "resreu", "so2dr")
+
+
+def _op_as_row_record(op):
+    """Render a box-IR op in the pre-redesign row-field schema."""
+    t = type(op).__name__
+    d = {"type": t}
+    if t == "H2D":
+        d.update(reg=op.reg, host_lo=op.box.lo[0], host_hi=op.box.hi[0],
+                 nbytes=op.nbytes, round=op.round, chunk=op.chunk)
+    elif t == "D2H":
+        d.update(reg=op.reg, reg_lo=op.reg_box.lo[0], reg_hi=op.reg_box.hi[0],
+                 host_lo=op.box.lo[0], host_hi=op.box.hi[0],
+                 nbytes=op.nbytes, round=op.round, chunk=op.chunk)
+    elif t == "BufferWrite":
+        d.update(buf=op.buf, reg=op.reg, reg_lo=op.reg_box.lo[0],
+                 reg_hi=op.reg_box.hi[0], nbytes=op.nbytes, round=op.round,
+                 chunk=op.chunk)
+    elif t == "BufferRead":
+        d.update(reg=op.reg, buf=op.buf, src=op.src, nbytes=op.nbytes,
+                 rows=op.extent, round=op.round, chunk=op.chunk)
+    elif t == "FusedKernel":
+        d.update(reg=op.reg, stencil=op.stencil, steps=op.steps,
+                 keep_top=op.keep_lo[0], keep_bottom=op.keep_hi[0],
+                 h_in=op.shape_in[0], h_out=op.shape_out[0],
+                 width=math.prod(op.shape_in[1:]), hbm_bytes=op.hbm_bytes,
+                 flops=op.flops, elements=op.elements, round=op.round,
+                 chunk=op.chunk)
+    elif t in ("Compress", "Decompress"):
+        d.update(codec=op.codec, reg=op.reg, direction=op.direction,
+                 raw_nbytes=op.raw_nbytes, wire_nbytes=op.wire_nbytes,
+                 host_lo=op.box.lo[0], host_hi=op.box.hi[0],
+                 round=op.round, chunk=op.chunk)
+    elif t == "HostCommit":
+        d.update(nbytes=op.nbytes, round=op.round)
+    return d
+
+
+def test_one_axis_plans_bit_identical_to_golden_row_plans():
+    """Every engine x config x codec of the pre-redesign fixture must
+    recompile to the exact same schedule: ops (in the old field schema),
+    stats, breakdown, op counts, stage keys — and infeasible configs must
+    fail with the exact same message."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    assert golden, "golden fixture is empty"
+    checked = errors = 0
+    for key, rec in golden.items():
+        eng, stname, geom, codec = key.split("/")
+        codec_arg = None if codec == "identity" else codec
+        if "error" in rec:
+            g = re.match(r"Y(\d+)X(\d+)n(\d+)d(\d+)ko(\d+)ki(\d+)", geom)
+            Y, X, n, d, ko, ki = map(int, g.groups())
+            with pytest.raises(ValueError) as exc:
+                compile_plan(eng, get_stencil(stname), Y, X, n, d, ko, ki,
+                             codec=codec_arg)
+            assert str(exc.value) == rec["error"], key
+            errors += 1
+            continue
+        m = rec["plan"]
+        plan = compile_plan(eng, get_stencil(m["stencil"]), m["Y"], m["X"],
+                            m["n"], m["d"], m["k_off"], m["k_on"],
+                            itemsize=m["itemsize"], codec=codec_arg)
+        assert plan.exact_elements == m["exact_elements"], key
+        assert [_op_as_row_record(op) for op in plan.ops] == rec["ops"], key
+        assert dataclasses.asdict(plan.stats()) == rec["stats"], key
+        assert plan.breakdown() == rec["breakdown"], key
+        assert plan.op_counts() == rec["op_counts"], key
+        stage_keys = [list(k) if k else None for k, _ in plan.stages()]
+        assert stage_keys == rec["stage_keys"], key
+        checked += 1
+    assert checked + errors == len(golden) and checked >= 40, (checked, errors)
+
+
+@settings(max_examples=8, deadline=None)
+@given(engine=stst.sampled_from(ENGINE_NAMES),
+       name=stst.sampled_from(("box2d1r", "star2d2r", "gradient2d")),
+       Y=stst.integers(24, 60), X=stst.integers(20, 48),
+       d=stst.integers(2, 4), k_off=stst.integers(1, 3))
+def test_transposed_column_plan_mirrors_row_plan(engine, name, Y, X, d,
+                                                 k_off):
+    """chunk_axis=1 on the transposed domain is the transposed schedule:
+    same stats/op counts, every box the transpose of its row twin."""
+    st = get_stencil(name)
+    n, k_on = 2 * k_off, 1
+    try:
+        row = compile_plan_nd(engine, st, (Y, X), n, d, k_off, k_on)
+    except ValueError:
+        with pytest.raises(ValueError):
+            compile_plan_nd(engine, st, (X, Y), n, d, k_off, k_on,
+                            chunk_axis=1)
+        return
+    col = compile_plan_nd(engine, st, (X, Y), n, d, k_off, k_on,
+                          chunk_axis=1)
+    assert dataclasses.asdict(row.stats()) == dataclasses.asdict(col.stats())
+    assert row.op_counts() == col.op_counts()
+
+    def t(box):
+        return Box(box.lo[::-1], box.hi[::-1])
+
+    for a, b in zip(row.ops, col.ops):
+        assert type(a) is type(b)
+        if isinstance(a, (H2D, Compress, Decompress)):
+            assert t(a.box) == b.box
+        elif isinstance(a, D2H):
+            assert t(a.box) == b.box and t(a.reg_box) == b.reg_box
+        elif isinstance(a, BufferWrite):
+            assert t(a.reg_box) == b.reg_box
+        elif isinstance(a, BufferRead):
+            assert (a.extent, a.nbytes) == (b.extent, b.nbytes)
+            assert b.axis == 1
+        elif isinstance(a, FusedKernel):
+            assert a.shape_in[::-1] == b.shape_in
+            assert a.shape_out[::-1] == b.shape_out
+            assert a.keep_lo[::-1] == b.keep_lo
+            assert a.keep_hi[::-1] == b.keep_hi
+            assert (a.hbm_bytes, a.flops, a.elements) == \
+                   (b.hbm_bytes, b.flops, b.elements)
+
+    # the column plan executes correctly (the stencil itself need not be
+    # transpose-symmetric, so the oracle is the reference on the
+    # transposed domain, not the transposed row output)
+    rng = np.random.default_rng(Y * 1000 + X)
+    xt = jnp.asarray(rng.standard_normal((X, Y)), jnp.float32)
+    out_col = EagerExecutor().execute(col, xt)[0]
+    ref = run_reference(xt, st, n)
+    scale = float(jnp.abs(ref).max()) or 1.0
+    assert float(jnp.max(jnp.abs(out_col - ref))) / scale < 1e-5
+
+
+@settings(max_examples=6, deadline=None)
+@given(engine=stst.sampled_from(ENGINE_NAMES),
+       codec=stst.sampled_from((None, "bf16", "zrle")),
+       d=stst.integers(2, 4))
+def test_one_axis_execution_matches_reference(engine, codec, d):
+    """All engines x codecs still run correctly through the box IR."""
+    st = get_stencil("box2d1r")
+    Y, X, n = 41, 33, 4
+    plan = compile_plan(engine, st, Y, X, n, d, 2, 2, codec=codec)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((Y, X)), jnp.float32)
+    out = EagerExecutor().execute(plan, x)[0]
+    ref = run_reference(x, st, n)
+    scale = float(jnp.abs(ref).max()) or 1.0
+    # lossless paths agree to reference up to kernel-impl rounding;
+    # bf16 pays its per-round-trip truncation bound
+    tol = 1e-5 if codec != "bf16" else n * 2.0**-7
+    assert float(jnp.max(jnp.abs(out - ref))) / scale <= tol
+
+
+def test_deprecated_row_accessors_warn_and_delegate():
+    """The old row-range fields survive as read-only properties on the
+    1-axis case: each warns with DeprecationWarning and agrees with the
+    box it delegates to."""
+    st = get_stencil("box2d1r")
+    plan = compile_plan("so2dr", st, 37, 23, 4, 2, 2, 2, codec="zrle")
+    seen = set()
+    for op in plan.ops:
+        cases = []
+        if isinstance(op, H2D):
+            cases = [("host_lo", op.box.lo[0]), ("host_hi", op.box.hi[0])]
+        elif isinstance(op, D2H):
+            cases = [("host_lo", op.box.lo[0]), ("host_hi", op.box.hi[0]),
+                     ("reg_lo", op.reg_box.lo[0]),
+                     ("reg_hi", op.reg_box.hi[0])]
+        elif isinstance(op, BufferWrite):
+            cases = [("reg_lo", op.reg_box.lo[0]),
+                     ("reg_hi", op.reg_box.hi[0])]
+        elif isinstance(op, BufferRead):
+            cases = [("rows", op.extent)]
+        elif isinstance(op, FusedKernel):
+            cases = [("keep_top", op.keep_lo[0]),
+                     ("keep_bottom", op.keep_hi[0]),
+                     ("h_in", op.shape_in[0]), ("h_out", op.shape_out[0]),
+                     ("width", op.shape_in[1])]
+        elif isinstance(op, (Compress, Decompress)):
+            cases = [("host_lo", op.box.lo[0]), ("host_hi", op.box.hi[0])]
+        for attr, want in cases:
+            with pytest.warns(DeprecationWarning, match=attr):
+                got = getattr(op, attr)
+            assert got == want, (type(op).__name__, attr)
+            seen.add((type(op).__name__, attr))
+    # the sweep actually exercised every op family
+    assert {name for name, _ in seen} >= {
+        "H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel",
+        "Compress", "Decompress"}
+
+    load = ShardLoad(rank=0, box=Box((2, 3), (5, 9)), nbytes=0, round=0,
+                     phase=0)
+    for attr, want in (("y0", 2), ("x0", 3), ("y1", 5), ("x1", 9)):
+        with pytest.warns(DeprecationWarning, match=attr):
+            assert getattr(load, attr) == want
+
+
+def test_fused_kernel_geometry_accounting_is_box_derived():
+    """Bytes and elements on every op must equal what its box volumes
+    say — the redesign's 'accounting derived from geometry' invariant."""
+    st = get_stencil("star2d2r")
+    plan = compile_plan("so2dr", st, 48, 36, 4, 3, 2, 2)
+    itemsize = plan.itemsize
+    for op in plan.ops:
+        if isinstance(op, (H2D, D2H)):
+            assert op.nbytes == op.box.volume * itemsize
+        elif isinstance(op, BufferWrite):
+            assert op.nbytes == op.reg_box.volume * itemsize
+        elif isinstance(op, FusedKernel):
+            vol_in = math.prod(op.shape_in)
+            vol_out = math.prod(op.shape_out)
+            assert op.hbm_bytes == (vol_in + vol_out) * itemsize
+            assert op.flops == op.elements * st.flops_per_elem
+        elif isinstance(op, HostCommit):
+            assert op.nbytes >= 0
+
+
+def test_top_level_api_is_stable():
+    """repro.__all__ resolves completely and covers the names README and
+    the redesign promise: Box, compile_plan, get_engine, get_executor,
+    autotune, StencilService (+ the box-era additions)."""
+    import repro
+
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+    required = {
+        "Box", "compile_plan", "compile_plan_nd", "compile_box_plan",
+        "get_engine", "get_executor", "autotune", "autotune_box",
+        "compress_plan", "get_codec", "compile_sharded", "autotune_sharded",
+        "run_reference", "get_stencil", "StencilService", "StencilJob",
+    }
+    assert required <= set(repro.__all__)
+
+    # the engine/executor registries answer for every documented name
+    for engine in ("incore", "naive_tb", "resreu", "so2dr", "box_tb"):
+        assert repro.get_engine(engine, d=2, k_off=1, k_on=1).name == engine
+    for executor in ("eager", "double_buffered", "dry_run"):
+        assert repro.get_executor(executor).name == executor
+
+
+def test_suite_reads_no_deprecated_fields():
+    """Compiling and executing through the public paths emits no
+    DeprecationWarning — the src tree is fully box-native."""
+    st = get_stencil("box2d1r")
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((29, 27)), jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        plan = compile_plan("so2dr", st, 29, 27, 4, 2, 2, 2, codec="zrle")
+        plan.stats(), plan.breakdown(), plan.op_counts(), list(plan.stages())
+        EagerExecutor().execute(plan, x)

@@ -148,7 +148,7 @@ def test_compress_plan_wraps_every_transfer():
             assert isinstance(before, Compress) and isinstance(after, Decompress)
             assert before.raw_nbytes == op.nbytes == after.raw_nbytes
             assert before.wire_nbytes == op.nbytes // 2
-            assert (before.host_lo, before.host_hi) == (op.host_lo, op.host_hi)
+            assert before.box == op.box == after.box
     s, s0 = plan.stats(), base.stats()
     assert (s.h2d_bytes, s.d2h_bytes) == (s0.h2d_bytes, s0.d2h_bytes)
     assert s.wire_bytes * 2 == s.transfer_bytes

@@ -79,13 +79,15 @@ def test_plan_ops_carry_provenance_and_bytes():
         assert 0 <= op.chunk < D
         seen.add(type(op))
         if isinstance(op, (H2D, D2H)):
-            assert op.nbytes == (op.host_hi - op.host_lo) * X * itemsize
+            assert op.nbytes == op.box.volume * itemsize
+            assert op.box.extent(1) == X
         elif isinstance(op, BufferWrite):
-            assert op.nbytes == (op.reg_hi - op.reg_lo) * X * itemsize
+            assert op.nbytes == op.reg_box.volume * itemsize
         elif isinstance(op, BufferRead):
-            assert op.nbytes == op.rows * X * itemsize
+            assert op.nbytes == op.extent * X * itemsize
         elif isinstance(op, FusedKernel):
-            assert op.hbm_bytes == (op.h_in + op.h_out) * X * itemsize
+            assert op.hbm_bytes == \
+                (op.shape_in[0] + op.shape_out[0]) * X * itemsize
     assert seen == {H2D, D2H, BufferWrite, BufferRead, FusedKernel}
 
 
