@@ -14,7 +14,10 @@ ways:
   ``kernel_compiles`` must be exactly 0 — this is the structural record
   CI gates on;
 * **solo baseline** — each job run alone (warm, same double-buffered
-  discipline) for the back-to-back comparison, measured and modeled.
+  discipline) for the back-to-back comparison, measured and modeled;
+* **faulted flush** — a 3-job batch with one terminally fault-injected
+  job: graceful degradation is gated structurally (exactly one
+  ``jobs_failed``, survivors complete, slot pool drains to zero).
 
 Structural fields (``plan_ops``, ``stage_count``, ``shape_buckets``,
 ``kernel_compiles``) are deterministic functions of the planner, the
@@ -25,6 +28,7 @@ exactly against ``benchmarks/baselines_serve.json``.  Wall-clock fields
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -128,6 +132,32 @@ def run(json_path=None):
         "jobs_per_s": len(solo) / solo_wall,                     # non-gating
     }
 
+    # -- faulted: graceful degradation under a terminal injected fault --
+    # one job of a 3-job warm batch dies mid-flush; the record gates that
+    # exactly one job fails, the survivors complete, and the slot pool
+    # fully drains (a lease leak here is a serving-capacity regression)
+    from repro.core.faults import KERNEL_FAULT, FaultPlan, FaultTrigger
+
+    faulted_trace = _jobs(TRACE[:3])
+    faults = FaultPlan([FaultTrigger(round=1, chunk=0, op_class="*",
+                                     kind=KERNEL_FAULT)])
+    for i, job in enumerate(faulted_trace):
+        x = rng.standard_normal(job.shape).astype(np.float32)
+        if i == 1:
+            job = dataclasses.replace(job, faults=faults)
+        svc.submit(job, x)
+    results_f = svc.flush()
+    records["serve/faulted"] = {
+        "jobs": len(results_f),
+        "jobs_failed": sum(r.status == "failed" for r in results_f),
+        "jobs_ok": sum(r.status == "ok" for r in results_f),
+        "faults_injected": sum(r.exec_stats.faults_injected
+                               for r in results_f),
+        "slot_pool_in_use_after": svc.slot_pool.in_use,
+        "kernel_compiles": sum(r.exec_stats.kernel_compiles
+                               for r in results_f),
+    }
+
     print(f"cold : {records['serve/trace']['jobs_per_s']:6.2f} jobs/s  "
           f"p50={records['serve/trace']['p50_latency_s']*1e3:7.1f}ms  "
           f"p99={records['serve/trace']['p99_latency_s']*1e3:7.1f}ms  "
@@ -138,6 +168,10 @@ def run(json_path=None):
           f"compiles={records['serve/warm']['kernel_compiles']}")
     print(f"solo : {records['serve/solo']['jobs_per_s']:6.2f} jobs/s "
           f"(warm back-to-back baseline)")
+    print(f"fault: {records['serve/faulted']['jobs_failed']}/"
+          f"{records['serve/faulted']['jobs']} jobs failed by injection, "
+          f"{records['serve/faulted']['jobs_ok']} survived, "
+          f"pool_in_use={records['serve/faulted']['slot_pool_in_use_after']}")
     print(f"model: interleaved {mi*1e6:.1f}us vs back-to-back {mb*1e6:.1f}us "
           f"({(1 - mi/mb)*100:.0f}% win)")
 

@@ -47,9 +47,14 @@ GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes", "ici_bytes")
 # bucket registry — one extra compile means warm-cache routing broke.
 # Latency/throughput fields in those records are not listed here, so
 # they stay non-gating artifacts.
+# ``faults_injected``/``jobs_failed``/``slot_pool_in_use_after`` gate the
+# chaos records: a clean run must stay clean (faults_injected=0 baselines
+# never drift), an injected drill must fail exactly the scheduled jobs,
+# and a faulted flush must leak zero slot leases.
 EXACT_FIELDS = ("plan_ops", "stage_count", "shape_buckets",
                 "collective_bytes_per_round", "redundant_elements",
-                "halo_ops", "kernel_compiles")
+                "halo_ops", "kernel_compiles", "faults_injected",
+                "jobs_failed", "jobs_ok", "slot_pool_in_use_after")
 
 
 def check(current: dict, baseline: dict, tolerance: float):

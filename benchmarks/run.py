@@ -37,6 +37,12 @@ the committed box_tb tile-grid x time-depth sweep on the 3-D
 ``heat3d1r`` workload.  Every dry-run record carries its box geometry
 (``shape``, ``chunk_axis``, ``tiles``, ``time_depth``).
 
+``--inject-fault`` is the chaos smoke (the CI ``chaos`` job): a small
+SO2DR run with a seeded transient-fault schedule absorbed by the retry
+loop, then a terminal kernel fault at every round recovered through the
+HostCommit checkpoint/resume path — each variant must be bit-identical
+to the uninterrupted run (exit code 1 on any mismatch).
+
 Unknown ``--engine``/``--codec``/``--executor``/``--fused-step`` names,
 geometry flags outside ``--dry-run``, and infeasible ``--tile`` x
 ``--time-depth`` combinations (apron deeper than a tile) are a hard
@@ -267,6 +273,70 @@ def exec_bench(engines, codecs, executor_name, fused_impl,
         _write_json(records, json_path)
 
 
+def inject_fault_smoke(seed: int) -> int:
+    """Chaos smoke: faulted runs must stay bit-identical to clean runs.
+
+    Two drills on a small SO2DR workload (zero devices beyond the CPU
+    backend): a seeded transient-transfer schedule fully absorbed by the
+    bounded-backoff retry loop, and a terminal kernel fault at every
+    round recovered through ``run_with_recovery`` + the HostCommit
+    checkpointer.  Returns a process exit code (1 = a recovered run
+    diverged from the uninterrupted one)."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core.executor import EagerExecutor
+    from repro.core.faults import (
+        KERNEL_FAULT, FaultPlan, FaultTrigger, RetryPolicy,
+    )
+    from repro.core.oocore import compile_plan
+    from repro.core.recovery import PlanCheckpointer, run_with_recovery
+    from repro.core.stencil import get_stencil
+
+    st = get_stencil("star2d1r")
+    plan = compile_plan("so2dr", st, 64, 32, 8, 2, 4, 2)
+    x = np.random.default_rng(seed).standard_normal((64, 32)) \
+        .astype(np.float32)
+    ref, _ = EagerExecutor().execute(plan, x)
+    retry = RetryPolicy(sleep=lambda s: None)
+    failures = 0
+
+    print("name,ok,derived")
+    faults = FaultPlan.seeded(seed, plan, n_faults=3)
+    ex = EagerExecutor()
+    host, _ = run_with_recovery(plan, x, executor=ex, faults=faults,
+                                retry=retry)
+    ok = np.array_equal(host, ref)
+    failures += not ok
+    print(f"chaos/transient_seeded,{int(ok)},"
+          f"faults={ex.exec_stats.faults_injected} "
+          f"retries={ex.exec_stats.retries}")
+
+    for rnd in sorted({op.round for op in plan.ops}):
+        faults = FaultPlan([FaultTrigger(round=rnd, chunk=None,
+                                         op_class="*", kind=KERNEL_FAULT)])
+        ex = EagerExecutor()
+        with tempfile.TemporaryDirectory() as d:
+            host, _ = run_with_recovery(
+                plan, x, executor=ex, faults=faults,
+                checkpoint=PlanCheckpointer(CheckpointManager(d), plan))
+        ok = np.array_equal(host, ref)
+        failures += not ok
+        print(f"chaos/kernel_fault_round{rnd},{int(ok)},"
+              f"resumes={ex.exec_stats.resumes} "
+              f"faults={ex.exec_stats.faults_injected}")
+
+    if failures:
+        print(f"chaos: {failures} recovered run(s) diverged from the "
+              f"uninterrupted reference", file=sys.stderr)
+        return 1
+    print("chaos: every faulted run bit-identical to the clean run",
+          file=sys.stderr)
+    return 0
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dry-run", action="store_true",
@@ -284,6 +354,12 @@ def main(argv=None) -> None:
     ap.add_argument("--fused-step", default="auto",
                     help="kernel-dispatch impl for --exec "
                          "(auto | reference | pallas | pallas_db | mxu)")
+    ap.add_argument("--inject-fault", action="store_true",
+                    help="chaos smoke: seeded fault injection + "
+                         "checkpoint/resume must stay bit-identical to "
+                         "the clean run (exit 1 on divergence)")
+    ap.add_argument("--fault-seed", type=int, default=0, metavar="S",
+                    help="seed for the --inject-fault schedule (default 0)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write dry-run/exec records as JSON")
     ap.add_argument("--chunk-axis", type=int, default=0, metavar="A",
@@ -309,8 +385,16 @@ def main(argv=None) -> None:
     engines = _resolve_names(args.engine, ENGINES, "engine", ap)
     codecs = _resolve_names(args.codec, CODECS, "codec", ap)
 
-    if args.dry_run and args.exec_bench:
-        ap.error("--dry-run and --exec are mutually exclusive")
+    if sum((args.dry_run, args.exec_bench, args.inject_fault)) > 1:
+        ap.error("--dry-run, --exec, and --inject-fault are mutually "
+                 "exclusive")
+    if args.fault_seed != 0 and not args.inject_fault:
+        ap.error("--fault-seed only applies to --inject-fault")
+    if args.inject_fault:
+        if args.json or args.engine != "all" or args.codec != "identity":
+            ap.error("--inject-fault takes only --fault-seed (the chaos "
+                     "smoke runs one committed workload)")
+        sys.exit(inject_fault_smoke(args.fault_seed))
     box_flags = args.tile is not None or args.time_depth is not None
     if (args.chunk_axis != 0 or box_flags) and not args.dry_run:
         ap.error("--chunk-axis/--tile/--time-depth only apply to --dry-run "

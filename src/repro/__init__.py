@@ -12,7 +12,10 @@ from ``repro`` directly and listed in ``__all__``:
 * ``autotune`` / ``autotune_box`` / ``autotune_sharded`` — dry-run
   config sweeps under the Sec. III model;
 * ``compress_plan`` / ``get_codec`` — the transfer-codec rewrite pass;
-* ``StencilService`` / ``StencilJob`` — the persistent plan server.
+* ``StencilService`` / ``StencilJob`` — the persistent plan server;
+* ``FaultPlan`` / ``RetryPolicy`` / ``run_with_recovery`` /
+  ``PlanCheckpointer`` — deterministic fault injection and
+  checkpoint/resume execution (see README's fault-tolerance section).
 
 Deeper machinery keeps its module-level home (``repro.core.lower``,
 ``repro.kernels.dispatch``, ``repro.core.distributed``, ...); those
@@ -41,6 +44,14 @@ from .core import (  # noqa: F401
     autotune_box,
     autotune_sharded,
     run_reference,
+    FaultPlan,
+    FaultTrigger,
+    RetryPolicy,
+    InjectedFault,
+    PlanExecutionError,
+    PlanCheckpointer,
+    resume_plan,
+    run_with_recovery,
 )
 from .serve import JobResult, StencilJob, StencilService  # noqa: F401
 
@@ -66,6 +77,14 @@ __all__ = [
     "autotune_box",
     "autotune_sharded",
     "run_reference",
+    "FaultPlan",
+    "FaultTrigger",
+    "RetryPolicy",
+    "InjectedFault",
+    "PlanExecutionError",
+    "PlanCheckpointer",
+    "resume_plan",
+    "run_with_recovery",
     "JobResult",
     "StencilJob",
     "StencilService",

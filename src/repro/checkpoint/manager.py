@@ -6,9 +6,14 @@ Layout:  <dir>/step_<n>/
 
 Writes go to ``step_<n>.tmp`` and are atomically renamed, so a job killed
 mid-save never corrupts the restore point (the previous step remains
-valid).  ``restore`` returns leaves as numpy; the caller re-places them
-onto the current mesh (see launch/elastic.py for re-sharding onto a
-*different* mesh/device count — elastic restart).
+valid).  Every payload file is fsync'd before the rename and the parent
+directory is fsync'd after it, so a *machine* crash (not just a process
+kill) cannot publish a step whose bytes never reached disk; ``meta.json``
+is written last and doubles as the completeness marker —
+``all_steps``/``restore`` skip any step directory missing it or the
+arrays payload.  ``restore`` returns leaves as numpy; the caller
+re-places them onto the current mesh (see launch/elastic.py for
+re-sharding onto a *different* mesh/device count — elastic restart).
 """
 from __future__ import annotations
 
@@ -57,6 +62,23 @@ def _unflatten(flat: dict, like):
     return rec("", like)
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory; directory fsync is what makes the
+    rename itself durable.  Best-effort on filesystems that refuse
+    directory fds (some network mounts)."""
+    flags = os.O_RDONLY | (os.O_DIRECTORY if os.path.isdir(path) else 0)
+    try:
+        fd = os.open(path, flags)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
@@ -66,6 +88,11 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:08d}")
 
+    def _complete(self, step: int) -> bool:
+        d = self._step_dir(step)
+        return (os.path.exists(os.path.join(d, "meta.json"))
+                and os.path.exists(os.path.join(d, "arrays.npz")))
+
     def save(self, step: int, tree: Any, extra_meta: Optional[dict] = None) -> str:
         final = self._step_dir(step)
         tmp = final + ".tmp"
@@ -74,14 +101,22 @@ class CheckpointManager:
         os.makedirs(tmp)
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
         flat = _flatten(host_tree)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        # arrays first, meta last: meta.json is the completeness marker
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
         meta = {"step": step, "n_leaves": len(flat)}
         meta.update(extra_meta or {})
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)  # atomic publish
+        _fsync_path(self.dir)  # make the rename itself durable
         self._gc()
         return final
 
@@ -91,10 +126,17 @@ class CheckpointManager:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     def all_steps(self):
+        """Published *complete* steps — a directory missing its payload
+        or its meta marker (a crash artifact) is invisible to restore."""
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1]))
+                try:
+                    step = int(name.split("_")[1])
+                except ValueError:
+                    continue
+                if self._complete(step):
+                    out.append(step)
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:

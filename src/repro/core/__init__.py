@@ -15,11 +15,14 @@ from .autotune import optimization_target, predicted_makespan, stage_costs, trap
 from .compress import CODECS, Codec, compress_plan, get_codec, register_codec  # noqa: F401
 from .executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor, get_executor  # noqa: F401
 from .executor import ShardMapExecutor, ShardedSimExecutor  # noqa: F401
+from .faults import FAULT_KINDS, FaultInjector, FaultPlan, FaultTrigger, InjectedFault, RetryPolicy  # noqa: F401
+from .faults import KernelFault, RankLossFault, SlotExhaustedError, TransientTransferError  # noqa: F401
 from .lower import CompiledPlan, CompiledShardedPlan, ExecStats, KernelCache, lower, lower_sharded  # noqa: F401
 from .oocore import BoxTB, InCore, NaiveTB, ResReu, SO2DR, TransferStats, get_engine  # noqa: F401
 from .oocore import compile_box_plan, compile_plan, compile_plan_nd  # noqa: F401
 from .plan import Box, BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan, FusedKernel, H2D, HostCommit  # noqa: F401
 from .plan import DeviceShard, HaloRecv, HaloSend, ShardKernel, ShardLoad, ShardStore, ShardedPlan  # noqa: F401
+from .recovery import PlanCheckpointer, PlanExecutionError, plan_fingerprint, resume_plan, run_with_recovery  # noqa: F401
 from .reference import multi_step_band, multi_step_box, run_reference, step_band, step_band_nd, step_domain  # noqa: F401
 from .shard import compile_sharded, ghost_wedge_elements  # noqa: F401
 from .stencil import PAPER_BENCHMARKS, REGISTRY, Stencil, get_stencil  # noqa: F401

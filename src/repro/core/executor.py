@@ -263,14 +263,27 @@ class _LoweredExecutorBase:
             self._lowered_memo[key] = (plan, fused_step, policy, compiled)
         return compiled
 
-    def execute(self, plan: ExecutionPlan,
-                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
+    supports_injection = True
+
+    def execute(self, plan: ExecutionPlan, x: np.ndarray,
+                injector=None, retry=None, on_commit=None,
+                ) -> Tuple[np.ndarray, TransferStats]:
+        """Run a plan.  ``injector``/``retry``/``on_commit`` thread the
+        fault-injection and checkpoint hooks through to
+        :meth:`repro.core.lower.CompiledPlan.execute`; they require the
+        lowered path (the legacy op-at-a-time interpreter has no op
+        sites to consult)."""
         if self.lowered:
             host, stats, exec_stats = self._compiled(plan).execute(
-                x, pipeline=self._pipeline, slot_pool=self.slot_pool)
+                x, pipeline=self._pipeline, slot_pool=self.slot_pool,
+                injector=injector, retry=retry, on_commit=on_commit)
             exec_stats.executor = self.name
             self.exec_stats = exec_stats
             return host, stats
+        if injector is not None or retry is not None or on_commit is not None:
+            raise ValueError(
+                "fault injection / commit hooks require the lowered "
+                "executor path (lowered=True)")
         host, stats = self._execute_legacy(plan, x)
         self.exec_stats = None
         return host, stats
@@ -366,6 +379,7 @@ class ShardedSimExecutor:
     schedules on a CPU container."""
 
     name = "sharded_sim"
+    supports_injection = True
 
     def __init__(self):
         self.kernel_cache = KernelCache()
@@ -380,11 +394,17 @@ class ShardedSimExecutor:
         self._lowered_memo = (plan, compiled)
         return compiled
 
-    def execute(self, plan: ShardedPlan,
-                x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
-        host, stats, exec_stats = self._compiled(plan).execute(x)
+    def execute(self, plan: ShardedPlan, x: np.ndarray,
+                injector=None, retry=None, on_commit=None,
+                ) -> Tuple[np.ndarray, TransferStats]:
+        host, stats, exec_stats = self._compiled(plan).execute(
+            x, injector=injector, retry=retry)
         exec_stats.executor = self.name
         self.exec_stats = exec_stats
+        if on_commit is not None:
+            # a sharded plan stores host state once, at the end: its
+            # whole run is one commit of the final round
+            on_commit(plan.rounds - 1, host)
         return host, stats
 
 

@@ -12,7 +12,8 @@ compiles the plan once instead:
   chunk)`` stages of *pre-bound closures*: register/buffer names are
   resolved to integer slots, slice bounds and codec objects are baked
   into each closure, and per-op type dispatch disappears from the
-  execution loop (it runs ``for tag, fn in stage: fn(rt)``).
+  execution loop (it runs ``for tag, fn, rnd, chunk in stage: fn(rt)``;
+  the trailing site pair addresses fault injection).
 * **kernel dispatch** — FusedKernel ops are resolved through the
   registry in :mod:`repro.kernels.dispatch` (reference jnp, Pallas,
   DMA-overlapped Pallas, banded-MXU) exactly once at lowering time.
@@ -49,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .compress import get_codec
+from .faults import InjectedFault, consult
 from .plan import (
     BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
     FusedKernel, H2D, HaloRecv, HaloSend, HostCommit, ShardKernel,
@@ -68,7 +70,10 @@ OP_TAGS = ("H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel",
            "ShardLoad", "ShardStore", "HaloSend", "HaloRecv", "ShardKernel")
 _TAG = {name: i for i, name in enumerate(OP_TAGS)}
 
-BoundOp = Tuple[int, Callable]          # (tag, closure over the runtime)
+# (tag, closure over the runtime, round, chunk) — the trailing site pair
+# is the fault-injection address: repro.core.faults consults it before
+# the closure runs, so an injected fault never leaves a half-executed op
+BoundOp = Tuple[int, Callable, int, int]
 
 
 @dataclasses.dataclass
@@ -92,6 +97,9 @@ class ExecStats:
     stage_count: int = 0
     lower_s: float = 0.0
     wall_s: float = 0.0
+    faults_injected: int = 0       # injected faults hit this run
+    retries: int = 0               # transient faults absorbed by backoff
+    resumes: int = 0               # checkpoint resumes (recovery loop)
 
     def __post_init__(self):
         # plain attribute, not a dataclass field: asdict/== never see it
@@ -125,6 +133,9 @@ class ExecStats:
             self.stage_count += other.stage_count
             self.lower_s += other.lower_s
             self.wall_s += other.wall_s
+            self.faults_injected += other.faults_injected
+            self.retries += other.retries
+            self.resumes += other.resumes
             self.executor = self.executor or other.executor
             self.kernel_impl = self.kernel_impl or other.kernel_impl
         return self
@@ -263,11 +274,16 @@ class _Runtime:
     against (the lowered counterpart of the executors' old name-keyed
     device state)."""
 
-    __slots__ = ("host", "regs", "bufs", "staged", "wire")
+    __slots__ = ("host", "regs", "bufs", "staged", "wire",
+                 "on_commit", "committed_round")
 
     def __init__(self, host: np.ndarray, n_regs: int, n_bufs: int,
                  regs: Optional[List] = None, bufs: Optional[List] = None):
         self.host = host
+        # recovery hooks: the newest round whose barrier fully drained
+        # (-1 = none), and an optional per-round checkpoint callback
+        self.on_commit: Optional[Callable[[int, np.ndarray], None]] = None
+        self.committed_round = -1
         # storage may be leased from a SlotPool (possibly longer than
         # needed — closures only ever index their bound slots)
         self.regs: List = regs if regs is not None else [None] * n_regs
@@ -289,6 +305,16 @@ class _Runtime:
                 rows = codec.decode(codec.encode(rows), rows.shape, rows.dtype)
             self.host[sl] = rows
         self.staged.clear()
+
+    def commit_round(self, rnd: int) -> None:
+        """A round's HostCommit barrier: drain staged writes, record the
+        round as the recovery point, fire the checkpoint hook (the host
+        array is the complete machine state here — nothing else survives
+        a barrier)."""
+        self.commit()
+        self.committed_round = rnd
+        if self.on_commit is not None:
+            self.on_commit(rnd, self.host)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -372,6 +398,7 @@ class CompiledPlan:
 
     def execute(self, x: np.ndarray, pipeline: bool = False,
                 slot_pool: Optional[SlotPool] = None,
+                injector=None, retry=None, on_commit=None,
                 ) -> Tuple[np.ndarray, TransferStats, ExecStats]:
         """Run the stage programs.
 
@@ -380,40 +407,66 @@ class CompiledPlan:
         double-buffered schedule; results are bitwise identical either
         way because prefetched ops only read committed host rows.
         ``slot_pool`` leases the runtime's slot storage from a shared
-        pool instead of allocating fresh lists."""
+        pool instead of allocating fresh lists.
+
+        ``injector`` (a :class:`repro.core.faults.FaultInjector`) is
+        consulted before every bound op; transient faults are retried in
+        place under ``retry`` (a :class:`repro.core.faults.RetryPolicy`),
+        terminal faults surface as a typed
+        :class:`repro.core.recovery.PlanExecutionError` carrying the
+        last committed round.  ``on_commit(round, host)`` fires after
+        every round's barrier drains — the checkpoint hook.  Leased slot
+        storage is released on *every* exit path (faulted runs do not
+        leak pool occupancy)."""
         rt = self.runtime(x, slot_pool)
+        rt.on_commit = on_commit
         wall = [0.0] * len(OP_TAGS)
         counts = [0] * len(OP_TAGS)
         hits0, miss0 = self.cache.hits, self.cache.misses
+        f0 = injector.faults_injected if injector is not None else 0
+        r0 = injector.retries if injector is not None else 0
         perf = time.perf_counter
         t_run = perf()
 
         def run(ops: Tuple[BoundOp, ...]) -> None:
-            for tag, fn in ops:
+            for tag, fn, rnd, chunk in ops:
+                if injector is not None:
+                    consult(injector, retry, rnd, chunk, OP_TAGS[tag])
                 t0 = perf()
                 fn(rt)
                 wall[tag] += perf() - t0
                 counts[tag] += 1
 
         stages = self.stages
-        if not pipeline:
-            for stage in stages:
-                run(stage.ops)
-        else:
-            n = len(stages)
-            prefetched = [False] * n
-            for j, stage in enumerate(stages):
-                if stage.key is None:       # HostCommit barrier
+        try:
+            if not pipeline:
+                for stage in stages:
                     run(stage.ops)
-                    continue
-                # prefetch the next chunk's transfers under this chunk's
-                # kernels; never across a barrier (host rows change there)
-                if j + 1 < n and stages[j + 1].key is not None:
-                    run(stages[j + 1].prefetch)
-                    prefetched[j + 1] = True
-                run(stage.rest if prefetched[j] else stage.ops)
-        rt.commit()   # no-op unless a planner forgot the final barrier
-        self.release_runtime(rt, slot_pool)
+            else:
+                n = len(stages)
+                prefetched = [False] * n
+                for j, stage in enumerate(stages):
+                    if stage.key is None:       # HostCommit barrier
+                        run(stage.ops)
+                        continue
+                    # prefetch the next chunk's transfers under this
+                    # chunk's kernels; never across a barrier (host rows
+                    # change there)
+                    if j + 1 < n and stages[j + 1].key is not None:
+                        run(stages[j + 1].prefetch)
+                        prefetched[j + 1] = True
+                    run(stage.rest if prefetched[j] else stage.ops)
+            rt.commit()   # no-op unless a planner forgot the final barrier
+        except InjectedFault as f:
+            from .recovery import PlanExecutionError, plan_fingerprint
+            raise PlanExecutionError(
+                f"plan execution failed at round={f.round} "
+                f"chunk={f.chunk} op={f.op_class}: {f.kind} "
+                f"(last committed round {rt.committed_round})",
+                fault=f, last_committed_round=rt.committed_round,
+                fingerprint=plan_fingerprint(self.plan)) from f
+        finally:
+            self.release_runtime(rt, slot_pool)
 
         stats = ExecStats(
             kernel_impl=self.kernel_impl,
@@ -426,6 +479,9 @@ class CompiledPlan:
             stage_count=sum(1 for s in stages if s.key is not None),
             lower_s=self.lower_s,
             wall_s=perf() - t_run,
+            faults_injected=(injector.faults_injected - f0)
+            if injector is not None else 0,
+            retries=(injector.retries - r0) if injector is not None else 0,
         )
         return rt.host, self.plan.stats(), stats
 
@@ -599,15 +655,20 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
     stages: List[List] = []             # [key, [BoundOp...]]
     chunk_ordinal = -1                  # index of the current chunk stage
 
-    def emit(key, tag: str, fn: Callable) -> None:
+    def emit(key, tag: str, fn: Callable, site=None) -> None:
+        s = site if site is not None else key
+        bound = (_TAG[tag], fn, s[0], s[1])
         if stages and stages[-1][0] == key and key is not None:
-            stages[-1][1].append((_TAG[tag], fn))
+            stages[-1][1].append(bound)
         else:
-            stages.append([key, [(_TAG[tag], fn)]])
+            stages.append([key, [bound]])
 
     for op in plan.ops:
         if isinstance(op, HostCommit):
-            emit(None, "HostCommit", _Runtime.commit)
+            def run_commit(rt, _r=op.round):
+                rt.commit_round(_r)
+
+            emit(None, "HostCommit", run_commit, site=(op.round, -1))
             continue
         key = (op.round, op.chunk)
         if not stages or stages[-1][0] != key:
@@ -731,8 +792,8 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
     for key, ops in stages:
         ops = tuple(ops)
         prefetch = tuple(
-            (tag, fn) for tag, fn in ops
-            if tag == _TAG["H2D"] or tag == _TAG["Compress"])
+            b for b in ops
+            if b[0] == _TAG["H2D"] or b[0] == _TAG["Compress"])
         rest = tuple(b for b in ops if b not in prefetch)
         lowered_stages.append(LoweredStage(key=key, ops=ops,
                                            prefetch=prefetch, rest=rest))
@@ -838,26 +899,47 @@ class CompiledShardedPlan:
             "buf_slots": 0,
         }
 
-    def execute(self, x: np.ndarray,
+    def execute(self, x: np.ndarray, injector=None, retry=None,
                 ) -> Tuple[np.ndarray, TransferStats, ExecStats]:
         """Run every phase in barrier order (all ranks lockstep).  The
         result matches the shard_map backend to float tolerance — same
         masked-update math via :func:`repro.core.distributed
         .masked_local_steps` — and the returned stats are the
-        plan-derived accounting, untouched by execution."""
+        plan-derived accounting, untouched by execution.
+
+        ``injector``/``retry`` mirror :meth:`CompiledPlan.execute`, with
+        the op site's chunk field addressing the *rank* — a
+        ``rank_loss`` trigger at ``(round, rank)`` fires mid-round, after
+        that round's loads/halos already moved (what a real preemption
+        costs).  Sharded plans commit host state once at the end, so a
+        terminal fault surfaces with ``last_committed_round = -1``; the
+        elastic harness (:mod:`repro.launch.elastic`) recovers round
+        granularity by executing one-round continuation plans."""
         rt = _ShardRuntime(validate_domain(self.plan, x), self.n_slots)
         wall = [0.0] * len(OP_TAGS)
         counts = [0] * len(OP_TAGS)
         hits0, miss0 = self.cache.hits, self.cache.misses
+        f0 = injector.faults_injected if injector is not None else 0
+        r0 = injector.retries if injector is not None else 0
         perf = time.perf_counter
         t_run = perf()
-        for stage in self.stages:
-            for tag, fn in stage.ops:
-                t0 = perf()
-                fn(rt)
-                wall[tag] += perf() - t0
-                counts[tag] += 1
-        rt.commit()
+        try:
+            for stage in self.stages:
+                for tag, fn, rnd, rank in stage.ops:
+                    if injector is not None:
+                        consult(injector, retry, rnd, rank, OP_TAGS[tag])
+                    t0 = perf()
+                    fn(rt)
+                    wall[tag] += perf() - t0
+                    counts[tag] += 1
+            rt.commit()
+        except InjectedFault as f:
+            from .recovery import PlanExecutionError, plan_fingerprint
+            raise PlanExecutionError(
+                f"sharded plan failed at round={f.round} rank={f.chunk} "
+                f"op={f.op_class}: {f.kind}",
+                fault=f, last_committed_round=-1,
+                fingerprint=plan_fingerprint(self.plan)) from f
         stats = ExecStats(
             kernel_impl="shard_sim",
             op_counts={OP_TAGS[i]: c for i, c in enumerate(counts) if c},
@@ -869,6 +951,9 @@ class CompiledShardedPlan:
             stage_count=len(self.stages),
             lower_s=self.lower_s,
             wall_s=perf() - t_run,
+            faults_injected=(injector.faults_injected - f0)
+            if injector is not None else 0,
+            retries=(injector.retries - r0) if injector is not None else 0,
         )
         return rt.host, self.plan.stats(), stats
 
@@ -902,7 +987,7 @@ def lower_sharded(plan: ShardedPlan,
                 def run(rt, _s=slot, _sl=sl):
                     rt.bands[_s] = jnp.asarray(rt.host[_sl])
 
-                bound.append((_TAG["ShardLoad"], run))
+                bound.append((_TAG["ShardLoad"], run, op.round, op.rank))
             elif isinstance(op, HaloSend):
                 slot = regs.get(f"band:{op.rank}")
                 mkey = (op.rank, op.dst, op.axis, op.round)
@@ -916,7 +1001,7 @@ def lower_sharded(plan: ShardedPlan,
                         payload = band[:, -_d:] if _e == "hi" else band[:, :_d]
                     rt.mail[_k] = payload
 
-                bound.append((_TAG["HaloSend"], run))
+                bound.append((_TAG["HaloSend"], run, op.round, op.rank))
             elif isinstance(op, HaloRecv):
                 slot = regs.get(f"band:{op.rank}")
                 mkey = (op.src, op.rank, op.axis, op.round)
@@ -937,12 +1022,13 @@ def lower_sharded(plan: ShardedPlan,
                     pair = [payload, band] if _e == "lo" else [band, payload]
                     rt.bands[_s] = jnp.concatenate(pair, axis=_a)
 
-                bound.append((_TAG["HaloRecv"], run))
+                bound.append((_TAG["HaloRecv"], run, op.round, op.rank))
             elif isinstance(op, ShardKernel):
                 slot = regs.get(f"band:{op.rank}")
                 signatures.add((op.stencil, op.steps, op.h, op.w))
                 bound.append((_TAG["ShardKernel"],
-                              _bind_shard_kernel(slot, op, plan, cache)))
+                              _bind_shard_kernel(slot, op, plan, cache),
+                              op.round, op.rank))
             elif isinstance(op, ShardStore):
                 slot = regs.free(f"band:{op.rank}", ordinal)
                 sl = op.box.slices()
@@ -952,7 +1038,7 @@ def lower_sharded(plan: ShardedPlan,
                     rt.bands[_s] = None
                     rt.staged.append((_sl, band))
 
-                bound.append((_TAG["ShardStore"], run))
+                bound.append((_TAG["ShardStore"], run, op.round, op.rank))
             else:  # pragma: no cover - planner/lowering version skew
                 raise TypeError(f"unknown sharded op {op!r}")
         stages.append(ShardStage(label=label, ops=tuple(bound)))

@@ -30,7 +30,9 @@ import numpy as np
 
 from repro.core.analytic import Hardware
 from repro.core.autotune import pipeline_makespan, stage_costs
+from repro.core.faults import InjectedFault, consult
 from repro.core.lower import CompiledPlan, ExecStats, OP_TAGS, SlotPool
+from repro.core.recovery import PlanExecutionError
 
 __all__ = ["ScheduledJob", "admission_order", "interleave_stages",
            "modeled_makespan", "run_interleaved"]
@@ -48,6 +50,10 @@ class ScheduledJob:
     x: np.ndarray
     predicted_s: float
     deadline: Optional[float] = None
+    # fault-injection hooks (None in production): consulted before every
+    # bound op of this job's stages, retried under ``retry``
+    injector: Optional[object] = None
+    retry: Optional[object] = None
 
 
 def admission_order(jobs: Sequence[ScheduledJob]) -> List[ScheduledJob]:
@@ -99,9 +105,12 @@ def modeled_makespan(jobs: Sequence[ScheduledJob], hw: Hardware,
 
 def run_interleaved(jobs: Sequence[ScheduledJob],
                     slot_pool: Optional[SlotPool] = None,
-                    ) -> List[Tuple[ScheduledJob, np.ndarray, ExecStats, float]]:
+                    ) -> List[Tuple[ScheduledJob, Optional[np.ndarray],
+                                    ExecStats, float,
+                                    Optional[PlanExecutionError]]]:
     """Execute the merged schedule; one result tuple per job, in the
-    given (admission) order: ``(job, host_out, exec_stats, latency_s)``.
+    given (admission) order: ``(job, host_out, exec_stats, latency_s,
+    fault)``.
 
     Each job gets its own :class:`~repro.core.lower._Runtime` (slot
     storage leased from ``slot_pool`` when given); the merged walk
@@ -109,7 +118,14 @@ def run_interleaved(jobs: Sequence[ScheduledJob],
     sequence, so job B's H2D is issued while job A's kernels are still
     in flight — the cross-job analogue of the paper's N_strm = 3
     overlap.  Latency is stamped when a job's last stage retires (its
-    final barrier has drained its staged writes)."""
+    final barrier has drained its staged writes).
+
+    Graceful degradation: a job whose injector raises a terminal fault
+    is *isolated* — its leased slots are released on the spot, its
+    remaining merged entries are skipped, and it comes back with
+    ``host_out=None`` and the typed ``fault`` attached — while every
+    other job's stage walk continues untouched (property-tested: the
+    survivors stay bit-identical to a fault-free run)."""
     perf = time.perf_counter
     runtimes = {}
     try:
@@ -123,9 +139,13 @@ def run_interleaved(jobs: Sequence[ScheduledJob],
         counts: Dict[int, List[int]] = {
             j.job_id: [0] * len(OP_TAGS) for j in jobs}
         snap: Dict[int, Tuple[int, int]] = {}   # job -> (hits, misses) deltas
+        inj0: Dict[int, Tuple[int, int]] = {}   # job -> (faults, retries) at t0
         for j in jobs:
             snap[j.job_id] = (0, 0)
+            inj0[j.job_id] = ((j.injector.faults_injected, j.injector.retries)
+                              if j.injector is not None else (0, 0))
         latency: Dict[int, float] = {}
+        failed: Dict[int, PlanExecutionError] = {}
         last_stage = {j.job_id: len(j.compiled.stages) - 1 for j in jobs}
 
         def run(job: ScheduledJob, ops) -> None:
@@ -133,20 +153,45 @@ def run_interleaved(jobs: Sequence[ScheduledJob],
             w, c = wall[job.job_id], counts[job.job_id]
             cache = job.compiled.cache
             h0, m0 = cache.snapshot()
-            for tag, fn in ops:
-                t0 = perf()
-                fn(rt)
-                w[tag] += perf() - t0
-                c[tag] += 1
-            h1, m1 = cache.snapshot()
-            dh, dm = snap[job.job_id]
-            snap[job.job_id] = (dh + h1 - h0, dm + m1 - m0)
+            try:
+                for tag, fn, rnd, chunk in ops:
+                    if job.injector is not None:
+                        consult(job.injector, job.retry, rnd, chunk,
+                                OP_TAGS[tag])
+                    t0 = perf()
+                    fn(rt)
+                    w[tag] += perf() - t0
+                    c[tag] += 1
+            finally:
+                h1, m1 = cache.snapshot()
+                dh, dm = snap[job.job_id]
+                snap[job.job_id] = (dh + h1 - h0, dm + m1 - m0)
+
+        def try_run(job: ScheduledJob, ops) -> bool:
+            """Run a job's ops; on a terminal injected fault, isolate the
+            job (slots back to the pool immediately) and record the typed
+            error.  Returns False when the job just died."""
+            try:
+                run(job, ops)
+                return True
+            except InjectedFault as f:
+                rt = runtimes[job.job_id]
+                failed[job.job_id] = PlanExecutionError(
+                    f"job {job.job_id} failed at round={f.round} "
+                    f"chunk={f.chunk} op={f.op_class}: {f.kind}",
+                    fault=f, last_committed_round=rt.committed_round)
+                CompiledPlan.release_runtime(rt, slot_pool)
+                runtimes[job.job_id] = None
+                latency[job.job_id] = perf() - t_start
+                return False
 
         t_start = perf()
         for m, (job, s) in enumerate(merged):
+            if job.job_id in failed:
+                continue
             stage = job.compiled.stages[s]
             if stage.key is None:           # the job's HostCommit barrier
-                run(job, stage.ops)
+                try_run(job, stage.ops)
             else:
                 # prefetch the next merged entry's transfer prefix (on
                 # *its* job's runtime) under this stage's kernels; a
@@ -154,12 +199,13 @@ def run_interleaved(jobs: Sequence[ScheduledJob],
                 # rows are about to change
                 if m + 1 < n:
                     nxt_job, nxt_s = merged[m + 1]
-                    nxt = nxt_job.compiled.stages[nxt_s]
-                    if nxt.key is not None:
-                        run(nxt_job, nxt.prefetch)
-                        prefetched[m + 1] = True
-                run(job, stage.rest if prefetched[m] else stage.ops)
-            if s == last_stage[job.job_id]:
+                    if nxt_job.job_id not in failed:
+                        nxt = nxt_job.compiled.stages[nxt_s]
+                        if nxt.key is not None and try_run(nxt_job,
+                                                           nxt.prefetch):
+                            prefetched[m + 1] = True
+                try_run(job, stage.rest if prefetched[m] else stage.ops)
+            if job.job_id not in failed and s == last_stage[job.job_id]:
                 runtimes[job.job_id].commit()   # planner-forgot-barrier no-op
                 latency[job.job_id] = perf() - t_start
 
@@ -167,6 +213,11 @@ def run_interleaved(jobs: Sequence[ScheduledJob],
         for job in jobs:
             c, w = counts[job.job_id], wall[job.job_id]
             dh, dm = snap[job.job_id]
+            if job.injector is not None:
+                df = job.injector.faults_injected - inj0[job.job_id][0]
+                dr = job.injector.retries - inj0[job.job_id][1]
+            else:
+                df = dr = 0
             stats = ExecStats(
                 executor="pipelined",
                 kernel_impl=job.compiled.kernel_impl,
@@ -180,9 +231,13 @@ def run_interleaved(jobs: Sequence[ScheduledJob],
                                 if st.key is not None),
                 lower_s=job.compiled.lower_s,
                 wall_s=latency[job.job_id],
+                faults_injected=df,
+                retries=dr,
             )
-            out.append((job, runtimes[job.job_id].host, stats,
-                        latency[job.job_id]))
+            fault = failed.get(job.job_id)
+            rt = runtimes[job.job_id]
+            out.append((job, rt.host if fault is None else None, stats,
+                        latency[job.job_id], fault))
         return out
     finally:
         for job in jobs:

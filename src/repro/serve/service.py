@@ -70,19 +70,32 @@ class StencilJob:
     d: int = 4
     s_tb: Optional[int] = None
     k_on: int = 2
+    # fault-injection schedule (tests/chaos drills only): a
+    # repro.core.faults.FaultPlan consulted at every op site of this
+    # job's stages, with transient faults retried under ``retry``
+    faults: Optional[object] = None
+    retry: Optional[object] = None
 
 
 @dataclasses.dataclass
 class JobResult:
     """What :meth:`StencilService.flush` returns per job, in execution
-    order."""
+    order.
+
+    ``status`` is ``"ok"`` or ``"failed"``; a failed job carries the
+    typed :class:`~repro.core.recovery.PlanExecutionError` in ``fault``
+    (with the injected cause and last committed round) and ``out=None``
+    — its slots were released the moment it died, and the rest of the
+    batch completed normally."""
 
     job_id: int
-    out: np.ndarray
+    out: Optional[np.ndarray]
     stats: TransferStats          # plan-side accounting
     exec_stats: ExecStats         # execution-side counters (per job)
     predicted_s: float            # dry-run price admission sorted on
     latency_s: float              # flush start -> this job's last commit
+    status: str = "ok"
+    fault: Optional[BaseException] = None
 
 
 class StencilService:
@@ -99,6 +112,7 @@ class StencilService:
         self._next_id = 0
         self.jobs_submitted = 0
         self.jobs_completed = 0
+        self.jobs_failed = 0
         # the admission order of the last flush (ScheduledJobs), kept so
         # callers can re-price the batch (modeled interleaved vs solo)
         self.last_admission: List[ScheduledJob] = []
@@ -131,12 +145,14 @@ class StencilService:
         dry-run model, enqueue.  Thread-safe; returns the job id."""
         compiled = self.compile_job(job, itemsize=x.dtype.itemsize)
         predicted = predicted_makespan(compiled.plan, self.hw)
+        injector = job.faults.injector() if job.faults is not None else None
         with self._lock:
             job_id = self._next_id
             self._next_id += 1
             self._queue.append(ScheduledJob(
                 job_id=job_id, compiled=compiled, x=x,
-                predicted_s=predicted, deadline=job.deadline))
+                predicted_s=predicted, deadline=job.deadline,
+                injector=injector, retry=job.retry))
             self.jobs_submitted += 1
         return job_id
 
@@ -149,21 +165,27 @@ class StencilService:
         admission order, their stage programs interleaved under the
         double-buffered discipline; results come back in that execution
         order.  Per-job ``ExecStats`` also merge into the service's
-        lifetime ``exec_stats``."""
+        lifetime ``exec_stats``.  A terminally-faulted job degrades
+        gracefully: it returns ``status="failed"`` with the fault
+        attached and never poisons the rest of the batch."""
         with self._lock:
             batch, self._queue = self._queue, []
         ordered = admission_order(batch)
         self.last_admission = ordered
         results: List[JobResult] = []
-        for job, host, stats, latency in run_interleaved(
+        n_ok = 0
+        for job, host, stats, latency, fault in run_interleaved(
                 ordered, slot_pool=self.slot_pool):
             self.exec_stats.merge(stats)
             results.append(JobResult(
                 job_id=job.job_id, out=host,
                 stats=job.compiled.plan.stats(), exec_stats=stats,
-                predicted_s=job.predicted_s, latency_s=latency))
+                predicted_s=job.predicted_s, latency_s=latency,
+                status="ok" if fault is None else "failed", fault=fault))
+            n_ok += fault is None
         with self._lock:
-            self.jobs_completed += len(results)
+            self.jobs_completed += n_ok
+            self.jobs_failed += len(results) - n_ok
         return results
 
     def run_solo(self, job: StencilJob, x: np.ndarray) -> JobResult:
@@ -202,6 +224,7 @@ class StencilService:
         return {
             "jobs_submitted": self.jobs_submitted,
             "jobs_completed": self.jobs_completed,
+            "jobs_failed": self.jobs_failed,
             "kernel_signatures": len(self.kernel_cache),
             "kernel_cache_hits": hits,
             "kernel_compiles": misses,

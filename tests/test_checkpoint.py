@@ -54,3 +54,26 @@ def test_atomic_no_tmp_left(tmp_path):
     names = os.listdir(tmp_path)
     assert "step_00000007" in names
     assert not any(n.endswith(".tmp") for n in names)
+
+
+def test_incomplete_step_dirs_invisible(tmp_path):
+    """Crash artifacts — a step dir missing its payload or its meta
+    marker, or a stale .tmp — never shadow the newest complete step."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"x": jnp.arange(4.0)}
+    mgr.save(1, tree, extra_meta={"tag": "good"})
+    # meta.json written but arrays.npz lost (torn write)
+    os.makedirs(tmp_path / "step_00000002")
+    (tmp_path / "step_00000002" / "meta.json").write_text("{}")
+    # arrays.npz written but crash before meta.json (the marker)
+    os.makedirs(tmp_path / "step_00000003")
+    np.savez(tmp_path / "step_00000003" / "arrays.npz", x=np.ones(4))
+    # a stale tmp dir and a non-step name
+    os.makedirs(tmp_path / "step_00000004.tmp")
+    os.makedirs(tmp_path / "step_backup")
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    restored, meta = mgr.restore(tree)
+    assert meta["tag"] == "good"
+    np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                  np.arange(4.0))
