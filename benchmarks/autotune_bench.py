@@ -1,27 +1,50 @@
 """Autotuner (paper Sec. VII future work): best modeled config per
-benchmark per machine, with the automated Fig. 3a bottleneck decision."""
+benchmark per machine, with the automated Fig. 3a bottleneck decision.
+
+Rows come from the unified :func:`repro.tune` entry point — one
+``TuneResult`` spelling per candidate regardless of plan family.  Set
+``TUNE_PROFILE`` to a :class:`~repro.core.calibrate.DeviceProfile` JSON
+path to price the sweep with calibrated constants instead of the
+hand-entered tables (rows then carry the profile id).
+"""
+import os
+
 from repro.core.analytic import RTX3080_PAPER, TPU_V5E
-from repro.core.autotune import autotune
+from repro.core.calibrate import DeviceProfile
 from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
+from repro.core.tune import TuneSpec, tune
 
 from .common import N_STEPS, OOC_SZ, emit
 
 
 def run():
     rows = []
+    profile = None
+    if os.environ.get("TUNE_PROFILE"):
+        profile = DeviceProfile.load(os.environ["TUNE_PROFILE"])
+    machines = ((RTX3080_PAPER, "rtx3080"), (TPU_V5E, "tpu_v5e"))
+    if profile is not None:
+        machines = machines + ((profile.as_hardware(), profile.profile_id),)
     for name in PAPER_BENCHMARKS:
         st = get_stencil(name)
-        for hw, tag in ((RTX3080_PAPER, "rtx3080"), (TPU_V5E, "tpu_v5e")):
-            ranked = autotune(st, OOC_SZ, N_STEPS, hw)
+        sz = OOC_SZ
+        spec = TuneSpec(stencil=name, shape=sz + 2 * st.radius,
+                        steps=N_STEPS)
+        for hw, tag in machines:
+            is_prof = profile is not None and tag == profile.profile_id
+            ranked = tune(spec, profile=profile if is_prof else None,
+                          hw=None if is_prof else hw)
             if not ranked:
                 continue
             b = ranked[0]
+            c = b.config
             rows.append((
                 f"autotune/{name}/{tag}",
-                b.time_s * 1e6 / N_STEPS,
-                f"modeled best engine={b.engine} d={b.d} s_tb={b.s_tb} "
-                f"k_on={b.k_on} impl={b.kernel_impl} "
-                f"next_target={b.bottleneck}",
+                b.modeled_s * 1e6 / N_STEPS,
+                f"modeled best engine={b.engine} d={c['d']} "
+                f"s_tb={c['s_tb']} k_on={c['k_on']} "
+                f"impl={c['kernel_impl']} next_target={b.bottleneck}"
+                + (f" profile={b.profile_id}" if b.profile_id else ""),
             ))
     return rows
 

@@ -1,0 +1,77 @@
+"""Fit a measured-cost DeviceProfile for this machine's backend.
+
+Runs the transfer / device-memory / kernel / codec microbenchmarks in
+:mod:`repro.core.calibrate` on whatever backend JAX resolves here,
+least-squares-fits the Sec. III model terms, and persists the versioned
+profile JSON (loadable as a ``Hardware`` drop-in by ``tune``,
+``StencilService``, and ``benchmarks/run.py --profile``).
+
+    PYTHONPATH=src python -m benchmarks.calibrate --quick --out BENCH_profile.json
+
+``--quick`` uses the small size ladders (seconds, CI-friendly); the
+default full ladders take minutes but tighten the fit.  Exit status is
+0 on a fitted profile, 1 when fitting fails.  Gate the result with
+``benchmarks/check_regression.py --profile``.
+"""
+import argparse
+import sys
+
+from repro.core.calibrate import calibrate
+
+from .common import emit
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fit a measured-cost DeviceProfile for this backend")
+    ap.add_argument("--quick", action="store_true",
+                    help="small size ladders (seconds; CI-friendly)")
+    ap.add_argument("--out", default="BENCH_profile.json",
+                    help="profile JSON path (default: %(default)s)")
+    ap.add_argument("--stencil", default="box2d1r")
+    ap.add_argument("--impls", default=None,
+                    help="comma-separated kernel impls (default: ladder's)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    impls = tuple(args.impls.split(",")) if args.impls else None
+    try:
+        prof = calibrate(quick=args.quick, stencil=args.stencil,
+                         kernel_impls=impls, seed=args.seed,
+                         progress=lambda msg: print(f"# {msg}",
+                                                    file=sys.stderr))
+    except Exception as e:
+        print(f"calibrate: fit failed: {e}", file=sys.stderr)
+        return 1
+    prof.save(args.out)
+
+    hw = prof.as_hardware()
+    rows = [
+        (f"calibrate/{prof.profile_id}/bw_intc", 0.0,
+         f"measured_cpu bw_intc={hw.bw_intc / 1e9:.3f}GB/s "
+         f"t_ici_latency={hw.t_ici_latency * 1e6:.1f}us"),
+        (f"calibrate/{prof.profile_id}/bw_dmem", 0.0,
+         f"measured_cpu bw_dmem={hw.bw_dmem / 1e9:.3f}GB/s"),
+        (f"calibrate/{prof.profile_id}/peak_vpu", 0.0,
+         f"measured_cpu peak_vpu={hw.peak_vpu_flops / 1e9:.3f}GFLOP/s"),
+    ]
+    for impl, terms in sorted(prof.kernel_terms.items()):
+        rows.append((
+            f"calibrate/{prof.profile_id}/kernel/{impl}", 0.0,
+            "measured_cpu " + " ".join(
+                f"{k}={v:.4g}" for k, v in sorted(terms.items()))))
+    for codec, thr in sorted(prof.codec_throughput.items()):
+        rows.append((
+            f"calibrate/{prof.profile_id}/codec/{codec}", 0.0,
+            f"measured_cpu enc={thr['encode_bps'] / 1e9:.3f}GB/s "
+            f"dec={thr['decode_bps'] / 1e9:.3f}GB/s"))
+    for name, resid in sorted(prof.residuals.items()):
+        rows.append((f"calibrate/{prof.profile_id}/residual/{name}",
+                     0.0, f"measured_cpu rel_rms={resid:.4f}"))
+    emit(rows)
+    print(f"# profile written to {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -26,6 +26,11 @@ The tolerance only absorbs intentional sub-percent accounting tweaks.
 Wall-clock numbers (``BENCH_exec.json``) never gate — they are uploaded
 as a non-gating CI artifact only.
 
+``--profile BENCH_profile.json`` gates *fit sanity* of a calibrated
+DeviceProfile (the CI ``calibrate`` job): every fitted rate must be
+strictly positive and every fit residual under ``--residual-ceiling``.
+The measured values themselves are machine-dependent and never gate.
+
 Exit code 0 = gate passes, 1 = regression, 2 = bad invocation.
 """
 
@@ -90,14 +95,87 @@ def check(current: dict, baseline: dict, tolerance: float):
     return errors, notes
 
 
+def check_profile(profile: dict, residual_ceiling: float):
+    """Fit-sanity gate for a calibrated DeviceProfile (CI `calibrate`
+    job): every fitted rate strictly positive, latency non-negative,
+    every relative-RMS fit residual under the ceiling.  Returns a list
+    of errors (empty = sane).  Measured *values* are machine-dependent
+    and never gate — only the shape of the fit does."""
+    errors = []
+    if profile.get("schema_version") != 1:
+        errors.append(f"profile: unsupported schema_version "
+                      f"{profile.get('schema_version')!r} (expected 1)")
+        return errors
+    hw = profile.get("hardware", {})
+    for term in ("bw_intc", "bw_dmem", "peak_vpu_flops"):
+        if not hw.get(term, 0) > 0:
+            errors.append(f"profile: fitted hardware.{term} not positive: "
+                          f"{hw.get(term)!r}")
+    if hw.get("t_ici_latency", 0) < 0:
+        errors.append(f"profile: hardware.t_ici_latency negative: "
+                      f"{hw['t_ici_latency']!r}")
+    for impl, terms in sorted(profile.get("kernel_terms", {}).items()):
+        for term in ("bw_eff", "flops_eff"):
+            if not terms.get(term, 0) > 0:
+                errors.append(f"profile: kernel_terms[{impl!r}].{term} "
+                              f"not positive: {terms.get(term)!r}")
+    for codec, thr in sorted(profile.get("codec_throughput", {}).items()):
+        for term in ("encode_bps", "decode_bps"):
+            if not thr.get(term, 0) > 0:
+                errors.append(f"profile: codec_throughput[{codec!r}].{term} "
+                              f"not positive: {thr.get(term)!r}")
+    for name, resid in sorted(profile.get("residuals", {}).items()):
+        if not resid >= 0:
+            errors.append(f"profile: residual {name} negative: {resid!r}")
+        elif resid > residual_ceiling:
+            errors.append(f"profile: residual {name} = {resid:.3f} exceeds "
+                          f"ceiling {residual_ceiling} (fit did not "
+                          f"converge; widen the size ladder or raise "
+                          f"--residual-ceiling deliberately)")
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="BENCH_plan.json from the current run")
+    ap.add_argument("current", nargs="?", default=None,
+                    help="BENCH_plan.json from the current run")
     ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
                     help="committed baseline (default: benchmarks/baselines.json)")
     ap.add_argument("--tolerance", type=float, default=0.01,
                     help="allowed relative increase per gated field (default 1%%)")
+    ap.add_argument("--profile", metavar="PATH", default=None,
+                    help="gate fit sanity of a calibrated DeviceProfile "
+                         "JSON (benchmarks/calibrate.py output) instead "
+                         "of / in addition to the plan records")
+    ap.add_argument("--residual-ceiling", type=float, default=5.0,
+                    help="max allowed relative-RMS fit residual for "
+                         "--profile (default %(default)s)")
     args = ap.parse_args(argv)
+
+    if args.current is None and args.profile is None:
+        ap.error("nothing to gate: pass BENCH_plan.json and/or --profile")
+
+    errors, notes = [], []
+    if args.profile is not None:
+        try:
+            with open(args.profile) as f:
+                profile = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            ap.error(str(e))
+        errors += check_profile(profile, args.residual_ceiling)
+        if not errors:
+            notes.append(f"profile {profile.get('profile_id')}: fit sane "
+                         f"(residuals <= {args.residual_ceiling})")
+    if args.current is None:
+        for note in notes:
+            print(f"NOTE  {note}")
+        for err in errors:
+            print(f"FAIL  {err}")
+        if errors:
+            print(f"bench-gate: {len(errors)} profile error(s)")
+            return 1
+        print("bench-gate: OK (profile fit sane)")
+        return 0
 
     try:
         with open(args.current) as f:
@@ -107,7 +185,9 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         ap.error(str(e))
 
-    errors, notes = check(current, baseline, args.tolerance)
+    plan_errors, plan_notes = check(current, baseline, args.tolerance)
+    errors += plan_errors
+    notes += plan_notes
     for note in notes:
         print(f"NOTE  {note}")
     for err in errors:

@@ -48,6 +48,40 @@ def run():
         t_pal * 1e6,
         "measured_cpu interpret=True (correctness path, not TPU perf)",
     ))
+
+    rows.extend(calibration_rows())
+    return rows
+
+
+def calibration_rows():
+    """Calibration-seed samples: the raw (feature, wall-clock) points the
+    fitter in :mod:`repro.core.calibrate` least-squares-fits into a
+    :class:`~repro.core.calibrate.DeviceProfile` — emitted here so the
+    CSV keeps an eyeball-able record of what the fit consumed."""
+    from repro.core.calibrate import (
+        measure_codec, measure_interconnect, measure_kernel_impl,
+    )
+
+    rows = []
+    for nbytes, t_h2d, t_d2h in measure_interconnect(
+            sizes=(1 << 20, 4 << 20), iters=2):
+        mb = nbytes / (1 << 20)
+        rows.append((f"calib/transfer/{mb:g}MB/measured_cpu", t_h2d * 1e6,
+                     f"measured_cpu h2d bw={nbytes / t_h2d / 1e9:.2f}GB/s "
+                     f"d2h bw={nbytes / t_d2h / 1e9:.2f}GB/s"))
+    for mem, flops, t in measure_kernel_impl(
+            "reference", "box2d1r", bands=((130, 258), (258, 258)),
+            steps_grid=(1, 2), iters=2):
+        rows.append((f"calib/kernel/reference/{mem}B/measured_cpu", t * 1e6,
+                     f"measured_cpu flops={flops} "
+                     f"rate={flops / t / 1e9:.2f}GFLOP/s"))
+    for codec in ("bf16", "zrle"):
+        for nbytes, t_enc, t_dec in measure_codec(
+                codec, sizes=(1 << 20,), iters=2):
+            rows.append((
+                f"calib/codec/{codec}/measured_cpu", t_enc * 1e6,
+                f"measured_cpu enc={nbytes / t_enc / 1e9:.2f}GB/s "
+                f"dec={nbytes / t_dec / 1e9:.2f}GB/s"))
     return rows
 
 

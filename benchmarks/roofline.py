@@ -9,10 +9,16 @@ paper-representative).
 import glob
 import json
 import os
+import sys
 
 from .common import emit
 
 ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+GENERATE_HINT = (
+    "PYTHONPATH=src python -m repro.launch.dryrun --all   "
+    "(writes artifacts/dryrun/*.json; see also --stencil for L2 cells)"
+)
 
 
 def load(art_dir=ART):
@@ -25,9 +31,9 @@ def load(art_dir=ART):
     return recs
 
 
-def run():
+def run(art_dir=None):
     rows = []
-    for r in load():
+    for r in load(ART if art_dir is None else art_dir):
         roof = r["roofline"]
         mesh = "2x16x16" if r["multi_pod"] else "16x16"
         dom = roof["dominant"]
@@ -66,7 +72,25 @@ def markdown_table(art_dir=ART):
     return "\n".join(lines)
 
 
-if __name__ == "__main__":
-    emit(run())
+def main(art_dir=None, argv=None) -> int:
+    """CLI entry: exit 2 (not an empty table) when the artifacts are
+    absent, pointing at the command that generates them."""
+    art_dir = ART if art_dir is None else art_dir
+    if not os.path.isdir(art_dir):
+        print(f"roofline: artifact directory {art_dir!r} does not exist.\n"
+              f"Generate it with:\n  {GENERATE_HINT}", file=sys.stderr)
+        return 2
+    recs = load(art_dir)
+    if not recs:
+        print(f"roofline: no usable dry-run records under {art_dir!r} "
+              f"(empty directory or every record skipped).\n"
+              f"Generate them with:\n  {GENERATE_HINT}", file=sys.stderr)
+        return 2
+    emit(run(art_dir))
     print()
-    print(markdown_table())
+    print(markdown_table(art_dir))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

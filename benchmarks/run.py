@@ -234,14 +234,16 @@ def dry_run(engines, codecs, json_path=None, chunk_axis=0,
 
 
 def exec_bench(engines, codecs, executor_name, fused_impl,
-               json_path=None) -> None:
+               json_path=None, profile=None) -> None:
     import numpy as np
 
+    from repro.core.autotune import predicted_makespan
     from repro.core.executor import get_executor
     from repro.core.oocore import compile_plan
     from repro.core.stencil import PAPER_BENCHMARKS, get_stencil
     from repro.kernels.dispatch import DispatchPolicy
 
+    hw_prof = profile.as_hardware() if profile is not None else None
     print("name,wall_ms,derived")
     records = {}
     policy = DispatchPolicy(impl=fused_impl)
@@ -258,6 +260,15 @@ def exec_bench(engines, codecs, executor_name, fused_impl,
                 ex = get_executor(executor_name, policy=policy)
                 _, _ = ex.execute(plan, x)
                 es = ex.exec_stats
+                derived = ""
+                if hw_prof is not None:
+                    # calibrated prediction vs this run's wall clock —
+                    # the per-record model-vs-measured attribution
+                    es.modeled_s = predicted_makespan(plan, hw_prof)
+                    es.model_error = ((es.modeled_s - es.wall_s)
+                                      / max(es.wall_s, 1e-12))
+                    derived = (f" modeled_ms={es.modeled_s * 1e3:.1f} "
+                               f"model_err={es.model_error:+.2f}")
                 key = f"{name}/{engine}/{codec}"
                 print(f"exec/{key},{es.wall_s * 1e3:.1f},"
                       f"impl={es.kernel_impl} "
@@ -265,9 +276,11 @@ def exec_bench(engines, codecs, executor_name, fused_impl,
                       f"compiles={es.kernel_compiles} "
                       f"hits={es.kernel_cache_hits} "
                       f"buckets={es.shape_buckets} "
-                      f"stages={es.stage_count}")
+                      f"stages={es.stage_count}" + derived)
                 rec = es.as_dict()
                 rec["executor"] = executor_name
+                if profile is not None:
+                    rec["profile_id"] = profile.profile_id
                 records[key] = rec
     if json_path:
         _write_json(records, json_path)
@@ -362,6 +375,11 @@ def main(argv=None) -> None:
                     help="seed for the --inject-fault schedule (default 0)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write dry-run/exec records as JSON")
+    ap.add_argument("--profile", metavar="PATH", default=None,
+                    help="DeviceProfile JSON (benchmarks/calibrate.py): "
+                         "price modeled rows with the calibrated constants "
+                         "— --exec records gain modeled_s/model_error, the "
+                         "measured suite adds a profile-priced autotune row")
     ap.add_argument("--chunk-axis", type=int, default=0, metavar="A",
                     help="streaming axis for the --dry-run engine sweep "
                          "(0 = the paper's row chunking; 1 = column "
@@ -390,6 +408,18 @@ def main(argv=None) -> None:
                  "exclusive")
     if args.fault_seed != 0 and not args.inject_fault:
         ap.error("--fault-seed only applies to --inject-fault")
+    profile = None
+    if args.profile is not None:
+        if args.dry_run or args.inject_fault:
+            ap.error("--profile applies where a Hardware is implied "
+                     "(--exec and the measured suite); dry-run records "
+                     "are plan geometry and the chaos smoke prices "
+                     "nothing")
+        from repro.core.calibrate import DeviceProfile, ProfileError
+        try:
+            profile = DeviceProfile.load(args.profile)
+        except (OSError, ProfileError, ValueError) as e:
+            ap.error(f"--profile {args.profile!r}: {e}")
     if args.inject_fault:
         if args.json or args.engine != "all" or args.codec != "identity":
             ap.error("--inject-fault takes only --fault-seed (the chaos "
@@ -453,11 +483,16 @@ def main(argv=None) -> None:
             ap.error(f"unknown --fused-step {args.fused_step!r}; known: "
                      f"{sorted(KERNEL_IMPLS)} (or 'auto')")
         exec_bench(engines, codecs, args.executor, args.fused_step,
-                   json_path=args.json)
+                   json_path=args.json, profile=profile)
         return
     if args.json or args.engine != "all" or args.codec != "identity":
         ap.error("--engine/--codec/--json only apply to --dry-run/--exec; "
                  "the measured path always runs the full figure suite")
+    if profile is not None:
+        # autotune_bench reads TUNE_PROFILE: the measured suite gains a
+        # row priced with this machine's calibrated constants
+        import os
+        os.environ["TUNE_PROFILE"] = args.profile
 
     from . import (
         autotune_bench, fig5_config_sweep, fig6_so2dr_vs_resreu,
@@ -479,7 +514,8 @@ def main(argv=None) -> None:
         if rows:
             emit(rows)
         else:
-            print("roofline,0,no dry-run artifacts (run scripts/run_dryrun_all.sh)")
+            print("roofline,0,no dry-run artifacts "
+                  "(run: PYTHONPATH=src python -m repro.launch.dryrun --all)")
     except Exception as e:
         print(f"roofline,0,ERROR {e}")
 

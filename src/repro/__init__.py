@@ -9,8 +9,13 @@ from ``repro`` directly and listed in ``__all__``:
   blocking);
 * ``get_engine`` / ``get_executor`` — the planner and interpreter
   registries;
-* ``autotune`` / ``autotune_box`` / ``autotune_sharded`` — dry-run
-  config sweeps under the Sec. III model;
+* ``tune`` / ``TuneSpec`` / ``TuneResult`` — the one tuner entry point
+  (row, box and sharded sweeps behind a single spec), with optional
+  measured refinement of the dry-run top-k;
+* ``DeviceProfile`` / ``calibrate`` — measured-cost calibration: fitted
+  per-device model constants, loadable as a ``Hardware`` drop-in;
+* ``autotune`` / ``autotune_box`` / ``autotune_sharded`` — deprecated
+  aliases of the per-mode sweeps (use ``tune``);
 * ``compress_plan`` / ``get_codec`` — the transfer-codec rewrite pass;
 * ``StencilService`` / ``StencilJob`` — the persistent plan server;
 * ``FaultPlan`` / ``RetryPolicy`` / ``run_with_recovery`` /
@@ -43,6 +48,12 @@ from .core import (  # noqa: F401
     autotune,
     autotune_box,
     autotune_sharded,
+    tune,
+    TuneSpec,
+    TuneResult,
+    DeviceProfile,
+    calibrate,
+    resolve_hardware,
     run_reference,
     FaultPlan,
     FaultTrigger,
@@ -76,6 +87,12 @@ __all__ = [
     "autotune",
     "autotune_box",
     "autotune_sharded",
+    "tune",
+    "TuneSpec",
+    "TuneResult",
+    "DeviceProfile",
+    "calibrate",
+    "resolve_hardware",
     "run_reference",
     "FaultPlan",
     "FaultTrigger",

@@ -12,6 +12,7 @@ the shard_map/ppermute backend (distributed).
 from .analytic import EngineTimes, Hardware, RTX3080_PAPER, TPU_V5E, model_times, times_from_plan  # noqa: F401
 from .autotune import BoxChoice, Choice, ShardedChoice, autotune, autotune_box, autotune_sharded  # noqa: F401
 from .autotune import optimization_target, predicted_makespan, stage_costs, trapezoid_redundant_elements  # noqa: F401
+from .calibrate import DeviceProfile, ProfileError, calibrate, resolve_hardware  # noqa: F401
 from .compress import CODECS, Codec, compress_plan, get_codec, register_codec  # noqa: F401
 from .executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor, get_executor  # noqa: F401
 from .executor import ShardMapExecutor, ShardedSimExecutor  # noqa: F401
@@ -26,3 +27,4 @@ from .recovery import PlanCheckpointer, PlanExecutionError, plan_fingerprint, re
 from .reference import multi_step_band, multi_step_box, run_reference, step_band, step_band_nd, step_domain  # noqa: F401
 from .shard import compile_sharded, ghost_wedge_elements  # noqa: F401
 from .stencil import PAPER_BENCHMARKS, REGISTRY, Stencil, get_stencil  # noqa: F401
+from .tune import TuneResult, TuneSpec, tune  # noqa: F401

@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import warnings
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 from .analytic import EngineTimes, Hardware, model_times
@@ -68,7 +69,15 @@ def _bottleneck(t: EngineTimes, n_streams: int) -> str:
     return "transfer" if t.h2d + t.d2h >= t.kernel + t.odc else "kernel"
 
 
-def autotune(
+def _deprecated_tuner(old: str) -> None:
+    warnings.warn(
+        f"repro.core.autotune.{old}() is deprecated; use "
+        f"repro.tune(repro.TuneSpec(...)) — one entry point for the row, "
+        f"box and sharded sweeps, with profile-aware costing and measured "
+        f"refinement", DeprecationWarning, stacklevel=3)
+
+
+def _autotune(
     st: Stencil,
     sz: int,
     n_steps: int,
@@ -81,6 +90,7 @@ def autotune(
     kernel_impls: Iterable[str] = ("reference", "pallas", "pallas_db"),
     tile_grid: Iterable[Optional[tuple]] = (None,),
     b_elem: int = 4,
+    profile=None,
 ) -> List[Choice]:
     """Rank all feasible configs by modeled overlapped time (best first).
 
@@ -130,7 +140,8 @@ def autotune(
                     kernel_terms = []
                     for impl in kernel_impls:
                         for tile in tile_grid:
-                            kt = modeled_kernel_time(base, hw, impl, tile)
+                            kt = modeled_kernel_time(base, hw, impl, tile,
+                                                     profile=profile)
                             if kt is not None:
                                 kernel_terms.append((impl, tile, kt))
                     for codec in codecs:
@@ -154,6 +165,15 @@ def autotune(
                             ))
     out.sort(key=lambda c: c.time_s)
     return out
+
+
+def autotune(*args, **kwargs) -> List[Choice]:
+    """Deprecated alias of the row-plan sweep — use :func:`repro.tune`."""
+    _deprecated_tuner("autotune")
+    return _autotune(*args, **kwargs)
+
+
+autotune.__doc__ = (autotune.__doc__ or "") + "\n\n" + (_autotune.__doc__ or "")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -216,7 +236,7 @@ def trapezoid_redundant_elements(st: Stencil, shape: Sequence[int],
     return computed - exact
 
 
-def autotune_box(
+def _autotune_box(
     st: Stencil,
     shape: Sequence[int],
     n_steps: int,
@@ -267,6 +287,16 @@ def autotune_box(
     return out
 
 
+def autotune_box(*args, **kwargs) -> List[BoxChoice]:
+    """Deprecated alias of the BoxTB sweep — use :func:`repro.tune`."""
+    _deprecated_tuner("autotune_box")
+    return _autotune_box(*args, **kwargs)
+
+
+autotune_box.__doc__ = (autotune_box.__doc__ or "") + "\n\n" + (
+    _autotune_box.__doc__ or "")
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedChoice:
     """One ranked L2 configuration: mesh decomposition + halo depth."""
@@ -285,7 +315,7 @@ class ShardedChoice:
         return dict(mesh=self.mesh, k_ici=self.k_ici)
 
 
-def autotune_sharded(
+def _autotune_sharded(
     st: Stencil,
     Y: int,
     n_steps: int,
@@ -351,6 +381,16 @@ def autotune_sharded(
                 ici_bytes=stats.ici_bytes, redundancy=stats.redundancy))
     out.sort(key=lambda c: c.time_s)
     return out
+
+
+def autotune_sharded(*args, **kwargs) -> List[ShardedChoice]:
+    """Deprecated alias of the L2 sharded sweep — use :func:`repro.tune`."""
+    _deprecated_tuner("autotune_sharded")
+    return _autotune_sharded(*args, **kwargs)
+
+
+autotune_sharded.__doc__ = (autotune_sharded.__doc__ or "") + "\n\n" + (
+    _autotune_sharded.__doc__ or "")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -453,5 +493,5 @@ def optimization_target(st: Stencil, sz: int, n_steps: int,
     codec would shrink the wire term and skew the very comparison this
     reproduces.  Sweep ``autotune(..., codecs=...)`` directly to ask the
     codec-aware question."""
-    ranked = autotune(st, sz, n_steps, hw, codecs=("identity",))
+    ranked = _autotune(st, sz, n_steps, hw, codecs=("identity",))
     return ranked[0].bottleneck if ranked else None

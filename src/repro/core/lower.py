@@ -100,6 +100,8 @@ class ExecStats:
     faults_injected: int = 0       # injected faults hit this run
     retries: int = 0               # transient faults absorbed by backoff
     resumes: int = 0               # checkpoint resumes (recovery loop)
+    modeled_s: Optional[float] = None     # Sec. III prediction for this run
+    model_error: Optional[float] = None   # (modeled_s - wall_s) / wall_s
 
     def __post_init__(self):
         # plain attribute, not a dataclass field: asdict/== never see it
@@ -138,6 +140,11 @@ class ExecStats:
             self.resumes += other.resumes
             self.executor = self.executor or other.executor
             self.kernel_impl = self.kernel_impl or other.kernel_impl
+            if other.modeled_s is not None:
+                self.modeled_s = (self.modeled_s or 0.0) + other.modeled_s
+            if self.modeled_s is not None and self.wall_s > 0:
+                self.model_error = ((self.modeled_s - self.wall_s)
+                                    / self.wall_s)
         return self
 
 

@@ -46,6 +46,7 @@ from repro.kernels import DEFAULT_TILE, MXU_TILE, ceil_div
 __all__ = [
     "DispatchPolicy", "KernelImpl", "KERNEL_IMPLS",
     "register_kernel_impl", "select_kernel", "modeled_kernel_time",
+    "kernel_op_features",
 ]
 
 # engine-facing fused-step signature:
@@ -235,32 +236,107 @@ def _clamped_tile(impl: KernelImpl, tile, h_out: int, X: int) -> Tuple[int, int]
     return min(ty, h_out), min(tx, X)
 
 
-def modeled_kernel_time(plan, hw, impl_name: str,
-                        tile: Optional[Tuple[int, int]] = None):
-    """Sec. III kernel term specialised per implementation.
+def kernel_op_features(impl_name: str, st, shape_in, steps: int,
+                       keep_lo, keep_hi, itemsize: int,
+                       hw=None, tile: Optional[Tuple[int, int]] = None):
+    """Model features of ONE fused call under one implementation.
 
-    Walks the plan's FusedKernel ops and returns
-    ``(kernel_s, mem_s, compute_s)`` — or ``None`` when the
-    implementation is infeasible for this plan (unsupported stencil, or
-    the apron'd tile set does not fit VMEM on hardware that models a
-    VMEM capacity).
+    Returns ``(mem_bytes, vpu_flops, mxu_flops)`` — the raw quantities
+    the Sec. III kernel term divides by hardware rates — or ``None``
+    when the implementation is infeasible for this geometry
+    (unsupported stencil, non-banded op on a tiled 2-D kernel, or an
+    apron'd tile set exceeding a modeled VMEM when ``hw`` is given).
+    :func:`modeled_kernel_time` sums these over a plan; the calibration
+    harness (:mod:`repro.core.calibrate`) fits measured wall clock
+    against the same features, so fitted rates mean exactly what the
+    model charges.
 
-    Per-impl terms:
+    Per-impl memory terms:
 
     * ``reference`` — no on-chip reuse across fused steps: every step
-      streams the band through HBM once (read + write), so the memory
-      term multiplies by the step count; compute on the VPU.
-    * ``pallas`` — one band read (inflated by the tile-apron overlap
-      factor) + one write per fused call; DMA and compute serialise in
-      the single-buffered kernel (``mem + compute``).
-    * ``pallas_db`` — same traffic, DMA hidden under compute
-      (``max(mem, compute)``).
-    * ``mxu`` — traffic like ``pallas``; compute recast as
-      ``(2r+1)`` banded matmuls of ``2*(TX+2r)`` MXU-flops per element.
+      streams the band through HBM once (read + write);
+    * ``pallas`` / ``pallas_db`` / ``mxu`` — one apron'd tile read per
+      output tile plus one exact band write per fused call.
     """
-    try:
-        impl = KERNEL_IMPLS[impl_name]
-    except KeyError:
+    impl = KERNEL_IMPLS[impl_name]
+    if not impl.supports(st, steps):
+        return None
+    r, m = st.radius, steps
+    from repro.core.plan import fused_box_geometry
+
+    shape_out, _, flops, elements = fused_box_geometry(
+        r, st.flops_per_elem, shape_in, m, keep_lo, keep_hi, itemsize)
+    mem_bytes = 0.0
+    mxu_flops = 0.0
+    banded = len(shape_in) == 2 and keep_lo[1] and keep_hi[1]
+    if impl_name == "reference":
+        # per-step band read + write: extents shrink r/step per
+        # non-frame side, mirroring fused_box_geometry
+        cur = list(shape_in)
+        for _ in range(m):
+            nxt = [c - 2 * r + (int(kl) + int(kh)) * r
+                   for c, kl, kh in zip(cur, keep_lo, keep_hi)]
+            mem_bytes += (math.prod(cur) + math.prod(nxt)) * itemsize
+            cur = nxt
+    elif not banded:
+        # the tiled 2-D kernels only run classic row bands; N-D box
+        # plans are reference-only for now
+        return None
+    else:
+        h_out, width = shape_out[0], shape_in[1]
+        ty, tx = _clamped_tile(impl, tile, h_out, width)
+        if ty <= 0 or tx <= 0:
+            return None
+        apron_bytes = (ty + 2 * m * r) * (tx + 2 * m * r) * itemsize
+        c_vmem = getattr(hw, "c_vmem", 0) if hw is not None else 0
+        if c_vmem and apron_bytes * impl.vmem_slots > c_vmem:
+            return None
+        n_tiles = ceil_div(h_out, ty) * ceil_div(width, tx)
+        # reads: one apron'd tile per output tile; writes: exact band
+        mem_bytes += n_tiles * apron_bytes + h_out * width * itemsize
+        if impl_name == "mxu":
+            n = 2 * r + 1
+            mxu_flops += elements * n * 2 * (tx + 2 * r)
+    return mem_bytes, float(flops), mxu_flops
+
+
+def _profiled_rates(hw, impl_name: str, profile):
+    """Hardware rates for one impl, overridden by a fitted
+    :class:`~repro.core.calibrate.DeviceProfile` when it carries terms
+    for that impl (duck-typed: anything with ``kernel_terms``)."""
+    bw, vpu, mxu = hw.bw_dmem, hw.peak_vpu_flops, hw.peak_mxu_flops
+    terms = getattr(profile, "kernel_terms", None)
+    if terms and impl_name in terms:
+        t = terms[impl_name]
+        bw = t.get("bw_eff", bw)
+        if impl_name == "mxu":
+            mxu = t.get("flops_eff", mxu)
+        else:
+            vpu = t.get("flops_eff", vpu)
+    return bw, vpu, mxu
+
+
+def modeled_kernel_time(plan, hw, impl_name: str,
+                        tile: Optional[Tuple[int, int]] = None,
+                        profile=None):
+    """Sec. III kernel term specialised per implementation.
+
+    Walks the plan's FusedKernel ops, sums their
+    :func:`kernel_op_features`, and returns ``(kernel_s, mem_s,
+    compute_s)`` — or ``None`` when the implementation is infeasible for
+    this plan (unsupported stencil, or the apron'd tile set does not fit
+    VMEM on hardware that models a VMEM capacity).
+
+    ``profile`` (a :class:`~repro.core.calibrate.DeviceProfile`)
+    replaces the hand-entered HBM bandwidth and FLOP rate with this
+    impl's *measured* effective rates when the profile carries a fit for
+    it — the measured-cost half of "model proposes, hardware disposes".
+
+    Overlap per impl: ``reference`` and ``pallas_db`` hide DMA under
+    compute (``max``); the single-buffered ``pallas`` and the ``mxu``
+    recast serialise them (``sum``).
+    """
+    if impl_name not in KERNEL_IMPLS:
         raise KeyError(
             f"unknown kernel impl {impl_name!r}; known: {sorted(KERNEL_IMPLS)}")
     mem_bytes = 0.0
@@ -271,44 +347,20 @@ def modeled_kernel_time(plan, hw, impl_name: str,
         if type(op).__name__ != "FusedKernel":
             continue
         st = get_stencil(op.stencil)
-        if not impl.supports(st, op.steps):
+        feats = kernel_op_features(impl_name, st, op.shape_in, op.steps,
+                                   op.keep_lo, op.keep_hi, itemsize,
+                                   hw=hw, tile=tile)
+        if feats is None:
             return None
-        r, m = st.radius, op.steps
-        vpu_flops += op.flops
-        banded = len(op.shape_in) == 2 and op.keep_lo[1] and op.keep_hi[1]
-        if impl_name == "reference":
-            # per-step band read + write: extents shrink r/step per
-            # non-frame side, mirroring fused_box_geometry
-            cur = list(op.shape_in)
-            for _ in range(m):
-                nxt = [c - 2 * r + (int(kl) + int(kh)) * r
-                       for c, kl, kh in zip(cur, op.keep_lo, op.keep_hi)]
-                mem_bytes += (math.prod(cur) + math.prod(nxt)) * itemsize
-                cur = nxt
-        elif not banded:
-            # the tiled 2-D kernels only run classic row bands; N-D box
-            # plans are reference-only for now
-            return None
-        else:
-            h_out, width = op.shape_out[0], op.shape_in[1]
-            ty, tx = _clamped_tile(impl, tile, h_out, width)
-            if ty <= 0 or tx <= 0:
-                return None
-            apron_bytes = (ty + 2 * m * r) * (tx + 2 * m * r) * itemsize
-            c_vmem = getattr(hw, "c_vmem", 0)
-            if c_vmem and apron_bytes * impl.vmem_slots > c_vmem:
-                return None
-            n_tiles = ceil_div(h_out, ty) * ceil_div(width, tx)
-            # reads: one apron'd tile per output tile; writes: exact band
-            mem_bytes += n_tiles * apron_bytes + h_out * width * itemsize
-            if impl_name == "mxu":
-                n = 2 * r + 1
-                mxu_flops += op.elements * n * 2 * (tx + 2 * r)
+        mem_bytes += feats[0]
+        vpu_flops += feats[1]
+        mxu_flops += feats[2]
+    bw_dmem, peak_vpu, peak_mxu = _profiled_rates(hw, impl_name, profile)
     if impl_name == "mxu":
-        compute_s = mxu_flops / hw.peak_mxu_flops
+        compute_s = mxu_flops / peak_mxu
     else:
-        compute_s = vpu_flops / hw.peak_vpu_flops
-    mem_s = mem_bytes / hw.bw_dmem
+        compute_s = vpu_flops / peak_vpu
+    mem_s = mem_bytes / bw_dmem
     if impl_name in ("reference", "pallas_db"):
         kernel_s = max(mem_s, compute_s)     # XLA / double-buffered overlap
     else:

@@ -88,12 +88,18 @@ def interleave_stages(jobs: Sequence[ScheduledJob],
 
 
 def modeled_makespan(jobs: Sequence[ScheduledJob], hw: Hardware,
-                     interleaved: bool = True) -> float:
+                     interleaved: bool = True, profile=None) -> float:
     """Dry-run makespan of the job set on the three-engine pipeline.
 
     ``interleaved=True`` prices the round-robin merge; ``False`` prices
     the same jobs back-to-back — the comparison the service's perf win
-    is asserted against (no device work either way)."""
+    is asserted against (no device work either way).  ``profile`` (a
+    :class:`~repro.core.calibrate.DeviceProfile` or a path) substitutes
+    calibrated constants for ``hw``."""
+    if profile is not None:
+        from repro.core.calibrate import resolve_hardware
+
+        hw = resolve_hardware(profile)
     costed = {j.job_id: stage_costs(j.compiled.plan, hw) for j in jobs}
     if interleaved:
         schedule = [(job.job_id, costed[job.job_id][s])

@@ -99,10 +99,21 @@ class JobResult:
 
 
 class StencilService:
-    """Long-lived stencil server amortizing compilation across jobs."""
+    """Long-lived stencil server amortizing compilation across jobs.
 
-    def __init__(self, hw: Hardware = TPU_V5E, policy=None):
-        self.hw = hw
+    ``profile`` — a :class:`~repro.core.calibrate.DeviceProfile` (or a
+    path to one): admission then prices ``predicted_makespan`` with the
+    profile's *calibrated* constants instead of the hand-entered ``hw``
+    table, so deadline decisions are trustworthy on the chip the
+    service actually landed on.  When both are given the profile wins."""
+
+    def __init__(self, hw: Hardware = TPU_V5E, policy=None, profile=None):
+        from repro.core.calibrate import DeviceProfile, resolve_hardware
+
+        if isinstance(profile, str):
+            profile = DeviceProfile.load(profile)
+        self.profile = profile
+        self.hw = hw if profile is None else resolve_hardware(profile)
         self.policy = policy
         self.kernel_cache = KernelCache()
         self.buckets = BucketRegistry()
@@ -222,6 +233,8 @@ class StencilService:
         """Lifetime counters: warm-cache health + pool reuse."""
         hits, misses = self.kernel_cache.snapshot()
         return {
+            "profile_id": (self.profile.profile_id
+                           if self.profile is not None else None),
             "jobs_submitted": self.jobs_submitted,
             "jobs_completed": self.jobs_completed,
             "jobs_failed": self.jobs_failed,
