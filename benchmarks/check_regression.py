@@ -41,7 +41,8 @@ from pathlib import Path
 
 DEFAULT_BASELINE = Path(__file__).resolve().parent / "baselines.json"
 
-GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes", "ici_bytes")
+GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes", "ici_bytes",
+                "ici_wire_bytes")
 # integer plan/lowering metrics: exact match, no tolerance.  The sharded
 # (L2) records add the plan-derived per-round collective bytes and the
 # ghost-wedge redundancy — deterministic functions of the schedule, so
@@ -56,10 +57,16 @@ GATED_FIELDS = ("wire_bytes", "raw_bytes", "buffer_bytes", "ici_bytes")
 # chaos records: a clean run must stay clean (faults_injected=0 baselines
 # never drift), an injected drill must fail exactly the scheduled jobs,
 # and a faulted flush must leak zero slot leases.
+# The hierarchical (hier/*) records add ``inner_chunks`` (the derived
+# nested-streaming depth for the fixed 1 GiB device budget) and
+# ``codec_ops`` (HaloCompress/Decompress sites) plus the per-round
+# *wire* collective rate — all plan-derived integers.
 EXACT_FIELDS = ("plan_ops", "stage_count", "shape_buckets",
-                "collective_bytes_per_round", "redundant_elements",
+                "collective_bytes_per_round",
+                "collective_wire_bytes_per_round", "redundant_elements",
                 "halo_ops", "kernel_compiles", "faults_injected",
-                "jobs_failed", "jobs_ok", "slot_pool_in_use_after")
+                "jobs_failed", "jobs_ok", "slot_pool_in_use_after",
+                "inner_chunks", "codec_ops")
 
 
 def check(current: dict, baseline: dict, tolerance: float):

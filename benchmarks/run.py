@@ -87,6 +87,19 @@ def _write_json(records, json_path) -> None:
 SHARD_MESH = (4, 2)
 SHARD_K_ICI = (1, 4, 8)
 
+# hierarchical dry-run workload: 1024^3 heat3d1r (trailing third axis)
+# over a 2x2 mesh whose shard working sets exceed a 1 GiB device budget,
+# so each ShardKernel expands into a nested box_tb streaming program;
+# the halo codec sweep shows ici_wire_bytes trading against raw payload
+HIER_STENCIL = "heat3d1r"
+HIER_SIDE = 1026                  # framed Y = X (interior 1024)
+HIER_TRAILING = (1026,)
+HIER_MESH = (2, 2)
+HIER_K_ICI = 4
+HIER_STEPS = 16
+HIER_C_DEV = 1 << 30
+HIER_CODECS = ("identity", "zrle", "bf16")
+
 # 3-D box temporal-blocking dry-run workload: a 1024^3 interior (4.3 GB
 # per array — out-of-core on the paper's 10 GB GPU), tile grids on the
 # leading two axes x time depths.  Geometry only: the dry-run executor
@@ -176,6 +189,44 @@ def _sharded_records(ex, records) -> None:
             }
 
 
+def _hierarchy_records(ex, records) -> None:
+    from repro.core.hierarchy import compile_hierarchical
+
+    for codec in HIER_CODECS:
+        plan = compile_hierarchical(
+            HIER_STENCIL, HIER_SIDE, HIER_SIDE, HIER_STEPS, HIER_K_ICI,
+            HIER_MESH, c_dev=HIER_C_DEV, inner_engine="box_tb",
+            codec=None if codec == "identity" else codec,
+            trailing=HIER_TRAILING)
+        _, s = ex.execute(plan)
+        key = (f"hier/{HIER_STENCIL}/mesh{HIER_MESH[0]}x{HIER_MESH[1]}"
+               f"/k{HIER_K_ICI}/{codec}")
+        print(f"dryrun/{key},{len(plan)},"
+              f"ici_gb={s.ici_bytes / 1e9:.2f} "
+              f"ici_wire_gb={s.ici_wire_bytes / 1e9:.2f} "
+              f"h2d_gb={s.h2d_bytes / 1e9:.2f} "
+              f"inner_chunks={plan.inner_chunks} "
+              f"kernels={s.kernel_calls} "
+              f"redundancy={s.redundancy:.4f}")
+        records[key] = {
+            "plan_ops": len(plan),
+            "raw_bytes": s.transfer_bytes,
+            "wire_bytes": s.wire_bytes,
+            "buffer_bytes": s.buffer_bytes,
+            "ici_bytes": s.ici_bytes,
+            "ici_wire_bytes": s.ici_wire_bytes,
+            "collective_bytes_per_round": plan.collective_bytes_per_round,
+            "collective_wire_bytes_per_round":
+                plan.collective_wire_bytes_per_round,
+            "halo_ops": s.halo_ops,
+            "codec_ops": s.codec_ops,
+            "kernel_calls": s.kernel_calls,
+            "inner_chunks": plan.inner_chunks,
+            "redundant_elements": s.redundant_elements,
+            "stage_count": len(plan.barriers),
+        }
+
+
 def dry_run(engines, codecs, json_path=None, chunk_axis=0,
             tile_grid=BOX_TILES, depths=BOX_DEPTHS) -> None:
     from repro.core.compress import compress_plan
@@ -223,12 +274,15 @@ def dry_run(engines, codecs, json_path=None, chunk_axis=0,
                     "shape_buckets": lowering["shape_buckets"],
                     "box": _plan_geometry(plan),
                 }
-    # 3-D box temporal-blocking plans (trapezoid aprons), then the
-    # multi-chip (L2) sharded plans: ICI + ghost-wedge accounting —
-    # both gated by check_regression.py next to the row byte records
+    # 3-D box temporal-blocking plans (trapezoid aprons), the multi-chip
+    # (L2) sharded plans (ICI + ghost-wedge accounting), then the
+    # hierarchical plans (nested L1 streaming inside shards, halo-codec
+    # wire bytes) — all gated by check_regression.py next to the row
+    # byte records
     if chunk_axis == 0:
         _box_records(ex, records, codecs, tile_grid, depths)
         _sharded_records(ex, records)
+        _hierarchy_records(ex, records)
     if json_path:
         _write_json(records, json_path)
 

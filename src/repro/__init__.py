@@ -16,7 +16,10 @@ from ``repro`` directly and listed in ``__all__``:
   per-device model constants, loadable as a ``Hardware`` drop-in;
 * ``autotune`` / ``autotune_box`` / ``autotune_sharded`` — deprecated
   aliases of the per-mode sweeps (use ``tune``);
-* ``compress_plan`` / ``get_codec`` — the transfer-codec rewrite pass;
+* ``compile_hierarchical`` / ``HierarchicalPlan`` — nested out-of-core
+  streaming inside shards when a subdomain exceeds device capacity;
+* ``compress_plan`` / ``get_codec`` — the transfer-codec rewrite pass
+  (H2D/D2H transfers *and* sharded halo exchanges);
 * ``StencilService`` / ``StencilJob`` — the persistent plan server;
 * ``FaultPlan`` / ``RetryPolicy`` / ``run_with_recovery`` /
   ``PlanCheckpointer`` — deterministic fault injection and
@@ -41,6 +44,8 @@ from .core import (  # noqa: F401
     compile_plan_nd,
     compile_box_plan,
     compile_sharded,
+    compile_hierarchical,
+    HierarchicalPlan,
     get_engine,
     get_executor,
     get_codec,
@@ -80,6 +85,8 @@ __all__ = [
     "compile_plan_nd",
     "compile_box_plan",
     "compile_sharded",
+    "compile_hierarchical",
+    "HierarchicalPlan",
     "get_engine",
     "get_executor",
     "get_codec",

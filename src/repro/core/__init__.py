@@ -7,7 +7,9 @@ double-buffered / dry-run).  Oracle (reference), stencil registry, chunk algebra
 Sec. III/IV-C models (analytic/params), plan-derived stats (accounting).
 The L2 sharded planner (shard) compiles per-device op streams with
 halo-exchange ops, executed by the single-device lockstep simulator or
-the shard_map/ppermute backend (distributed).
+the shard_map/ppermute backend (distributed); when a shard's working
+set exceeds device capacity, the hierarchical compiler (hierarchy)
+nests an L1 out-of-core streaming plan inside every shard.
 """
 from .analytic import EngineTimes, Hardware, RTX3080_PAPER, TPU_V5E, model_times, times_from_plan  # noqa: F401
 from .autotune import BoxChoice, Choice, ShardedChoice, autotune, autotune_box, autotune_sharded  # noqa: F401
@@ -18,6 +20,7 @@ from .executor import DoubleBufferedExecutor, DryRunExecutor, EagerExecutor, get
 from .executor import ShardMapExecutor, ShardedSimExecutor  # noqa: F401
 from .faults import FAULT_KINDS, FaultInjector, FaultPlan, FaultTrigger, InjectedFault, RetryPolicy  # noqa: F401
 from .faults import KernelFault, RankLossFault, SlotExhaustedError, TransientTransferError  # noqa: F401
+from .hierarchy import HierarchicalPlan, compile_hierarchical  # noqa: F401
 from .lower import CompiledPlan, CompiledShardedPlan, ExecStats, KernelCache, lower, lower_sharded  # noqa: F401
 from .oocore import BoxTB, InCore, NaiveTB, ResReu, SO2DR, TransferStats, get_engine  # noqa: F401
 from .oocore import compile_box_plan, compile_plan, compile_plan_nd  # noqa: F401

@@ -34,6 +34,14 @@ class Hardware:
     n_streams: int = 3    # paper fixes N_strm = 3 (double buffering + compute)
     c_vmem: int = 0       # on-chip scratch (VMEM/shared mem), bytes; 0 = unmodeled
     t_ici_latency: float = 0.0  # per collective phase launch overhead, s
+    c_dev: int = 0        # per-device working-set budget, bytes; 0 = c_dmem
+
+    def __post_init__(self):
+        # the hierarchical planner budgets a shard's resident working set
+        # against c_dev; it defaults to the device-memory capacity so the
+        # existing constants need no new numbers
+        if self.c_dev == 0:
+            object.__setattr__(self, "c_dev", self.c_dmem)
 
 
 # The paper's experimental machine (Table II) — used to sanity-check the

@@ -42,7 +42,7 @@ __all__ = ["Choice", "autotune", "optimization_target",
            "BoxChoice", "autotune_box", "trapezoid_redundant_elements",
            "ShardedChoice", "autotune_sharded",
            "StageCost", "stage_costs", "pipeline_makespan",
-           "predicted_makespan"]
+           "predicted_makespan", "predicted_sharded_makespan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,7 +299,8 @@ autotune_box.__doc__ = (autotune_box.__doc__ or "") + "\n\n" + (
 
 @dataclasses.dataclass(frozen=True)
 class ShardedChoice:
-    """One ranked L2 configuration: mesh decomposition + halo depth."""
+    """One ranked L2 configuration: mesh decomposition + halo depth
+    (+ halo codec)."""
 
     mesh: Tuple[int, int]
     k_ici: int
@@ -307,12 +308,14 @@ class ShardedChoice:
     bottleneck: str          # "ici" | "kernel"
     ici_s: float
     kernel_s: float
-    ici_bytes: int           # total send-side ICI payload
+    ici_bytes: int           # total send-side ICI payload (raw)
     redundancy: float        # plan-derived ghost-wedge overhead
+    codec: str = "identity"  # halo codec ("identity" = raw exchange)
+    ici_wire_bytes: int = 0  # total send-side ICI payload on the wire
 
     @property
     def config(self):
-        return dict(mesh=self.mesh, k_ici=self.k_ici)
+        return dict(mesh=self.mesh, k_ici=self.k_ici, codec=self.codec)
 
 
 def _autotune_sharded(
@@ -322,6 +325,7 @@ def _autotune_sharded(
     hw: Hardware,
     n_devices: int = 8,
     k_ici_grid: Iterable[int] = (1, 2, 4, 8),
+    codecs: Iterable[str] = ("identity",),
     b_elem: int = 4,
 ) -> List[ShardedChoice]:
     """Rank mesh decomposition x ``k_ici`` for the L2 sharded engine
@@ -334,13 +338,25 @@ def _autotune_sharded(
     skipped exactly like the L1 sweep skips infeasible ``k_off``) and is
     costed from the plan-derived stats alone:
 
-    * ICI time charges the max per-rank send bytes per round at
-      ``bw_ici`` plus ``t_ici_latency`` per collective phase (two per
-      round on a 2-D mesh) — the latency term is what makes the paper's
-      trade visible: larger ``k_ici`` buys ``1/k`` fewer exchange
-      phases for a near-constant per-step byte cost;
+    * ICI time charges the max per-rank send bytes per round — *wire*
+      bytes, so a halo codec shrinks this term — at ``bw_ici`` plus
+      ``t_ici_latency`` per collective phase (two per round on a 2-D
+      mesh) — the latency term is what makes the paper's trade visible:
+      larger ``k_ici`` buys ``1/k`` fewer exchange phases for a
+      near-constant per-step byte cost;
     * kernel time is the per-rank roofline over the max rank (ghost
       wedges included), so deeper halos pay their redundant compute.
+
+    ``codecs`` sweeps the halo codec alongside ``(mesh, k_ici)``: the
+    base plan is compiled once per geometry and rewritten per codec by
+    :func:`~repro.core.compress.compress_plan` (which learns the
+    collective vocabulary on sharded plans), so ``ici_wire_bytes``
+    replaces ``ici_bytes`` in the bandwidth term while a non-identity
+    codec is charged one extra ``t_ici_latency`` per exchange phase for
+    its encode/decode stage — zrle/bf16 halos only win when the config
+    is latency-tolerant and bandwidth-bound.  The default grid is
+    identity-only for the same reason the row sweep's is lossless-only:
+    the model charges no accuracy cost.
 
     The two phases do not overlap in the exchange-then-compute schedule,
     so the total is their sum.  The per-device schedule knobs
@@ -361,24 +377,35 @@ def _autotune_sharded(
         mesh = (n_row, n_devices // n_row)
         for k_ici in k_ici_grid:
             try:
-                plan = compile_sharded(st.name, Y, Y, n_steps, k_ici, mesh,
+                base = compile_sharded(st.name, Y, Y, n_steps, k_ici, mesh,
                                        itemsize=b_elem)
             except ValueError:
                 continue
-            _, stats = DryRunExecutor().execute(plan)
             phases = (mesh[0] > 1) + (mesh[1] > 1)   # row + col exchanges
-            ici_s = plan.rounds * (
-                phases * hw.t_ici_latency
-                + plan.collective_bytes_per_round / hw.bw_ici)
-            per = [plan.per_rank_stats(r) for r in range(plan.n_ranks)]
+            # kernel ops are codec-independent: roofline once per geometry
+            per = [base.per_rank_stats(r) for r in range(base.n_ranks)]
             k_mem = max(p.kernel_hbm_bytes for p in per) / hw.bw_dmem
             k_cmp = max(p.flops for p in per) / hw.peak_vpu_flops
             kernel_s = max(k_mem, k_cmp)
-            out.append(ShardedChoice(
-                mesh=mesh, k_ici=k_ici, time_s=ici_s + kernel_s,
-                bottleneck="ici" if ici_s >= kernel_s else "kernel",
-                ici_s=ici_s, kernel_s=kernel_s,
-                ici_bytes=stats.ici_bytes, redundancy=stats.redundancy))
+            for codec in codecs:
+                try:
+                    plan = (base if codec == "identity"
+                            else compress_plan(base, codec))
+                except ValueError:
+                    continue   # codec can't handle this itemsize
+                _, stats = DryRunExecutor().execute(plan)
+                # a non-identity codec stages encode/decode around each
+                # exchange phase: one extra latency charge per phase
+                lat = phases * hw.t_ici_latency * (2 if codec != "identity"
+                                                   else 1)
+                ici_s = plan.rounds * (
+                    lat + plan.collective_wire_bytes_per_round / hw.bw_ici)
+                out.append(ShardedChoice(
+                    mesh=mesh, k_ici=k_ici, time_s=ici_s + kernel_s,
+                    bottleneck="ici" if ici_s >= kernel_s else "kernel",
+                    ici_s=ici_s, kernel_s=kernel_s,
+                    ici_bytes=stats.ici_bytes, redundancy=stats.redundancy,
+                    codec=codec, ici_wire_bytes=stats.ici_wire_bytes))
     out.sort(key=lambda c: c.time_s)
     return out
 
@@ -482,6 +509,33 @@ def predicted_makespan(plan: ExecutionPlan, hw: Hardware) -> float:
     The dry-run cost the serving layer's deadline-aware admission sorts
     on: no device work, no arrays — stage geometry in, seconds out."""
     return pipeline_makespan((0, sc) for sc in stage_costs(plan, hw))
+
+
+def predicted_sharded_makespan(plan, hw: Hardware) -> float:
+    """Modeled makespan of one sharded (or hierarchical) plan: the ICI
+    exchange term plus the per-rank kernel roofline, priced exactly like
+    one :func:`autotune_sharded` candidate.
+
+    The ICI term charges *wire* bytes — a halo codec on the plan shrinks
+    it, at the cost of one extra ``t_ici_latency`` per exchange phase
+    for the encode/decode stage.  For a hierarchical plan the per-rank
+    stats already roll the nested streaming program up, so the inner
+    H2D/D2H traffic rides the kernel term's memory side the same way
+    the sharded sweep sees ghost-wedge redundancy."""
+    if hw.bw_ici <= 0:
+        raise ValueError(f"hardware {hw.name!r} has no modeled ICI bandwidth")
+    mesh = plan.mesh_shape
+    phases = (mesh[0] > 1) + (mesh[1] > 1)
+    codec = getattr(plan, "codec", "")
+    lat = phases * hw.t_ici_latency * (2 if codec not in ("", "identity")
+                                       else 1)
+    ici_s = plan.rounds * (
+        lat + plan.collective_wire_bytes_per_round / hw.bw_ici)
+    per = [plan.per_rank_stats(r) for r in range(plan.n_ranks)]
+    k_mem = max(p.kernel_hbm_bytes + p.h2d_wire_bytes + p.d2h_wire_bytes
+                + p.buffer_bytes for p in per) / hw.bw_dmem
+    k_cmp = max(p.flops for p in per) / hw.peak_vpu_flops
+    return ici_s + max(k_mem, k_cmp)
 
 
 def optimization_target(st: Stencil, sz: int, n_steps: int,

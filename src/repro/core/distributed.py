@@ -178,6 +178,10 @@ def execute_sharded_plan(plan, x, mesh=None, row_axis: str = "data",
     executes."""
     # shared geometry checks, before any mesh is built: both backends
     # reject identically by construction
+    if getattr(plan, "trailing", ()):
+        raise ValueError(
+            f"plan models trailing axes {plan.trailing}; trailing plans "
+            "are dry-run-only (byte/flop accounting) and cannot execute")
     check_domain(plan, x)
     if mesh is None:
         mesh = make_mesh(plan.mesh_shape, (row_axis, col_axis),

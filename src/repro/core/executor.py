@@ -376,17 +376,25 @@ class ShardedSimExecutor:
     against the ``shard_map`` oracle: results match
     :func:`repro.core.distributed.run_distributed` to float tolerance
     with zero real devices, which is what lets CI exercise multi-chip
-    schedules on a CPU container."""
+    schedules on a CPU container.
+
+    Hierarchical plans (:mod:`repro.core.hierarchy`) run through the
+    same entry point: the lowering layer expands each ShardKernel into
+    its rank's nested stage program, and ``slot_pool`` (optional, shared
+    with the serving layer) supplies the chunk-slot storage those inner
+    programs lease per round."""
 
     name = "sharded_sim"
     supports_injection = True
 
-    def __init__(self):
-        self.kernel_cache = KernelCache()
+    def __init__(self, slot_pool=None, kernel_cache=None):
+        self.kernel_cache = kernel_cache if kernel_cache is not None \
+            else KernelCache()
+        self.slot_pool = slot_pool
         self.exec_stats: Optional[ExecStats] = None
         self._lowered_memo = None
 
-    def _compiled(self, plan: ShardedPlan):
+    def _compiled(self, plan):
         memo = self._lowered_memo
         if memo is not None and memo[0] is plan:
             return memo[1]
@@ -394,11 +402,11 @@ class ShardedSimExecutor:
         self._lowered_memo = (plan, compiled)
         return compiled
 
-    def execute(self, plan: ShardedPlan, x: np.ndarray,
+    def execute(self, plan, x: np.ndarray,
                 injector=None, retry=None, on_commit=None,
                 ) -> Tuple[np.ndarray, TransferStats]:
         host, stats, exec_stats = self._compiled(plan).execute(
-            x, injector=injector, retry=retry)
+            x, injector=injector, retry=retry, slot_pool=self.slot_pool)
         exec_stats.executor = self.name
         self.exec_stats = exec_stats
         if on_commit is not None:
@@ -416,7 +424,14 @@ class ShardMapExecutor:
     so ``execute(plan, x)`` needs no configuration beyond an optional
     explicit mesh — by default a ``plan.mesh_shape`` mesh is built from
     the visible devices.  Stats are the plan-derived accounting, same as
-    every other executor."""
+    every other executor.
+
+    Hierarchical and halo-compressed plans dispatch on their *outer
+    geometry*: the backend runs one fused shard_map program per round,
+    so the nested chunking and the codec round trip are sim-only
+    refinements — each device holds its full band (valid when the real
+    device fits it) and halos cross ``ppermute`` raw.  Stats still
+    report the plan's own two-level/wire accounting."""
 
     name = "shard_map"
 
@@ -427,7 +442,7 @@ class ShardMapExecutor:
         self.col_axis = col_axis
         self.exec_stats: Optional[ExecStats] = None
 
-    def execute(self, plan: ShardedPlan,
+    def execute(self, plan,
                 x: np.ndarray) -> Tuple[np.ndarray, TransferStats]:
         import time
 

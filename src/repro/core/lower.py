@@ -52,9 +52,10 @@ import numpy as np
 from .compress import get_codec
 from .faults import InjectedFault, consult
 from .plan import (
-    BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
-    FusedKernel, H2D, HaloRecv, HaloSend, HostCommit, ShardKernel,
-    ShardLoad, ShardStore, ShardedPlan, TransferStats,
+    Box, BufferRead, BufferWrite, Compress, D2H, Decompress, ExecutionPlan,
+    FusedKernel, H2D, HaloCompress, HaloDecompress, HaloRecv, HaloSend,
+    HostCommit, ShardKernel, ShardLoad, ShardStore, ShardedPlan,
+    TransferStats,
 )
 
 __all__ = [
@@ -67,7 +68,8 @@ __all__ = [
 # op-class tags (indices into the per-class wall-clock accumulators)
 OP_TAGS = ("H2D", "D2H", "BufferWrite", "BufferRead", "FusedKernel",
            "HostCommit", "Compress", "Decompress",
-           "ShardLoad", "ShardStore", "HaloSend", "HaloRecv", "ShardKernel")
+           "ShardLoad", "ShardStore", "HaloSend", "HaloRecv", "ShardKernel",
+           "HaloCompress", "HaloDecompress")
 _TAG = {name: i for i, name in enumerate(OP_TAGS)}
 
 # (tag, closure over the runtime, round, chunk) — the trailing site pair
@@ -274,6 +276,22 @@ class SlotPool:
         with self._lock:
             return {"leases": self.leases, "reuses": self.reuses,
                     "in_use": self.in_use, "peak_in_use": self.peak_in_use}
+
+    def assert_balanced(self) -> None:
+        """Raise if any lease is still outstanding.
+
+        The audit hook for quiescent points (end of a job, service
+        drain): every ``acquire`` must have been paired with a
+        ``release`` — including on exception paths, where the lowered
+        executors release in ``finally`` — so a non-zero ``in_use`` here
+        is a leaked lease, i.e. device slot storage pinned by a job that
+        already retired."""
+        with self._lock:
+            if self.in_use != 0:
+                raise AssertionError(
+                    f"slot pool unbalanced: {self.in_use} lease(s) "
+                    f"outstanding ({self.leases} acquired, "
+                    f"{self.leases - self.in_use} released)")
 
 
 class _Runtime:
@@ -628,9 +646,45 @@ def _bind_kernel_nd(slot: int, op: FusedKernel, cache: KernelCache,
     return run
 
 
+def _bind_kernel_masked(slot: int, op: FusedKernel, box: Box,
+                        origin: Tuple[int, int, int, int],
+                        cache: KernelCache, itemsize: int) -> Callable:
+    """Bind a hierarchical inner FusedKernel to the globally-masked
+    update (:func:`repro.core.distributed.masked_local_steps`).
+
+    ``box`` is the register's ext in band coordinates; ``origin`` maps
+    the band into the global framed domain ``(gy0, gx0, Yg, Xg)``.  The
+    per-chunk global offsets are *traced* arguments, so every chunk of
+    every rank with the same ext shape shares one compiled signature —
+    the same trick :func:`_bind_shard_kernel` plays one level up.  No
+    crop here: the masked step preserves the ext's frame, and the D2H
+    that follows selects only the rows/cols at halo depth."""
+    from .distributed import masked_local_steps
+    from .stencil import get_stencil
+
+    st = get_stencil(op.stencil)
+    gy0, gx0, Yg, Xg = origin
+    key = ("hier", op.stencil, op.steps, op.shape_in, Yg, Xg, itemsize)
+    oy, ox = gy0 + box.lo[0], gx0 + box.lo[1]
+    steps = op.steps
+
+    def make() -> Callable:
+        def f(ext, y0, x0):
+            return masked_local_steps(ext, st, steps, y0, x0, Yg, Xg)
+        return jax.jit(f)
+
+    def run(rt):
+        fn = cache.lookup(key, make)
+        rt.regs[slot] = fn(rt.regs[slot], oy, ox)
+
+    return run
+
+
 def lower(plan: ExecutionPlan, policy=None, fused_step=None,
           kernel_cache: Optional[KernelCache] = None,
-          bucket_registry: Optional[BucketRegistry] = None) -> CompiledPlan:
+          bucket_registry: Optional[BucketRegistry] = None,
+          shard_origin: Optional[Tuple[int, int, int, int]] = None,
+          ) -> CompiledPlan:
     """Compile a plan into stage programs of slot-bound closures.
 
     ``fused_step`` (an explicit ``fn(band, name, steps, keep_top=...,
@@ -641,13 +695,22 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
     plans and runs; ``bucket_registry`` additionally routes this plan's
     band heights to already-registered cross-plan buckets so a warm
     service compiles zero new kernels for shapes that fit an existing
-    bucket."""
+    bucket.
+
+    ``shard_origin`` switches the kernel binding to hierarchical inner
+    semantics: the plan's domain is one shard's halo-extended band at
+    global origin ``(gy0, gx0)`` inside a ``(Yg, Xg)`` framed domain,
+    and every FusedKernel runs the globally-masked update instead of
+    the frame-shrinking fused step (:func:`_bind_kernel_masked`)."""
     from repro.kernels.dispatch import DispatchPolicy, select_kernel
 
     t0 = time.perf_counter()
     policy = policy or DispatchPolicy()
     cache = kernel_cache if kernel_cache is not None else KernelCache()
     buckets = _bucket_heights(plan, policy.bucket, bucket_registry)
+    # band-coordinate ext of each live register, tracked only for the
+    # masked (shard_origin) binding, which needs the global offset
+    reg_boxes: Dict[str, Box] = {}
 
     regs = _SlotAllocator()
     bufs = _SlotAllocator()
@@ -721,6 +784,8 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
                 # point the device bytes are forced anyway)
                 emit(key, "Decompress", _noop)
         elif isinstance(op, H2D):
+            if shard_origin is not None:
+                reg_boxes[op.reg] = op.box
             if op.reg in pending_h2d:
                 # the wire hop already carried the encoded payload
                 del pending_h2d[op.reg]
@@ -746,6 +811,11 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
             bslot = bufs.free(op.buf, chunk_ordinal)    # consumed exactly once
             src_slot = regs.free(op.src, chunk_ordinal)  # src dies here
             dst_slot = regs.alloc(op.reg)
+            if shard_origin is not None:
+                # the buffer's extent slices prepend at the low side
+                sbox = reg_boxes.pop(op.src)
+                reg_boxes[op.reg] = sbox.with_axis(
+                    op.axis, sbox.lo[op.axis] - op.extent, sbox.hi[op.axis])
 
             def run(rt, _b=bslot, _src=src_slot, _dst=dst_slot, _ax=op.axis):
                 shared = rt.bufs[_b]
@@ -758,6 +828,15 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
             emit(key, "BufferRead", run)
         elif isinstance(op, FusedKernel):
             slot = regs.get(op.reg)
+            if shard_origin is not None:
+                # hierarchical inner kernel: globally-masked update, one
+                # signature per ext shape (origins are traced)
+                signatures.add(("hier", op.stencil, op.steps, op.shape_in))
+                nd_impls.add("masked_hier")
+                emit(key, "FusedKernel",
+                     _bind_kernel_masked(slot, op, reg_boxes[op.reg],
+                                         shard_origin, cache, plan.itemsize))
+                continue
             if not _is_banded(op):
                 # N-D box band: reference kernel, one signature per
                 # distinct (shape, keeps)
@@ -782,6 +861,8 @@ def lower(plan: ExecutionPlan, policy=None, fused_step=None,
                               plan.itemsize))
         elif isinstance(op, D2H):
             slot = regs.free(op.reg, chunk_ordinal)   # last use of the register
+            if shard_origin is not None:
+                reg_boxes.pop(op.reg, None)
             codec_name = pending_d2h.pop(op.reg, None)
             rsl, hsl = op.reg_box.slices(), op.box.slices()
 
@@ -830,15 +911,19 @@ class _ShardRuntime:
     """Slot-indexed per-rank band state + the halo mailbox the bound
     closures run against.  ``mail`` is keyed ``(src, dst, axis, round)``
     — unique per exchange because each ordered rank pair swaps at most
-    one payload per axis per round."""
+    one payload per axis per round; with a halo codec the value is the
+    encoded ``(payload, shape, dtype)`` wire triple instead of the raw
+    slice.  ``slot_pool`` (optional) is the shared pool hierarchical
+    inner plans lease their chunk-slot storage from."""
 
-    __slots__ = ("host", "bands", "mail", "staged")
+    __slots__ = ("host", "bands", "mail", "staged", "slot_pool")
 
-    def __init__(self, host: np.ndarray, n_slots: int):
+    def __init__(self, host: np.ndarray, n_slots: int, slot_pool=None):
         self.host = host
         self.bands: List = [None] * n_slots
         self.mail: Dict[tuple, jnp.ndarray] = {}
         self.staged: List[tuple] = []   # (host slice tuple, device band)
+        self.slot_pool = slot_pool
 
     def commit(self) -> None:
         for _, rows in self.staged:
@@ -856,6 +941,25 @@ class ShardStage:
 
     label: str
     ops: Tuple[BoundOp, ...]
+
+
+def _bind_hier_kernel(slot: int, hk: int, inner) -> Callable:
+    """Bind a ShardKernel to its expanded inner plan (hierarchical
+    execution): the rank's halo-extended band becomes the inner plan's
+    host domain, the nested stage programs stream it chunk-wise through
+    the ordinary H2D/kernel/D2H path (leasing slot storage from the
+    shared pool when one rides on the runtime), and the updated owned
+    region is cropped back — exactly what the flat masked kernel's crop
+    produces, because the inner kernels run the same globally-masked
+    update on ext regions whose write-back depth equals the halo."""
+
+    def run(rt):
+        band = np.asarray(rt.bands[slot])
+        host, _, _ = inner.execute(band, slot_pool=rt.slot_pool)
+        rt.bands[slot] = jnp.asarray(
+            host[hk:-hk, hk:-hk] if hk else host)
+
+    return run
 
 
 def _bind_shard_kernel(slot: int, op: ShardKernel, plan: ShardedPlan,
@@ -896,17 +1000,19 @@ class CompiledShardedPlan:
     shape_buckets: int
     cache: KernelCache
     lower_s: float
+    kernel_impl: str = "shard_sim"
 
     def describe(self) -> dict:
         return {
             "stage_count": len(self.stages),
             "shape_buckets": self.shape_buckets,
-            "kernel_impl": "shard_sim",
+            "kernel_impl": self.kernel_impl,
             "reg_slots": self.n_slots,
             "buf_slots": 0,
         }
 
     def execute(self, x: np.ndarray, injector=None, retry=None,
+                slot_pool: Optional[SlotPool] = None,
                 ) -> Tuple[np.ndarray, TransferStats, ExecStats]:
         """Run every phase in barrier order (all ranks lockstep).  The
         result matches the shard_map backend to float tolerance — same
@@ -921,8 +1027,15 @@ class CompiledShardedPlan:
         costs).  Sharded plans commit host state once at the end, so a
         terminal fault surfaces with ``last_committed_round = -1``; the
         elastic harness (:mod:`repro.launch.elastic`) recovers round
-        granularity by executing one-round continuation plans."""
-        rt = _ShardRuntime(validate_domain(self.plan, x), self.n_slots)
+        granularity by executing one-round continuation plans.
+
+        ``slot_pool`` is only consulted by hierarchical plans: each
+        expanded ShardKernel leases its inner chunk-slot storage from
+        the pool and releases it when the nested run retires (also on
+        fault paths — the inner executor releases in ``finally``), so
+        :meth:`SlotPool.assert_balanced` holds after any exit."""
+        rt = _ShardRuntime(validate_domain(self.plan, x), self.n_slots,
+                           slot_pool=slot_pool)
         wall = [0.0] * len(OP_TAGS)
         counts = [0] * len(OP_TAGS)
         hits0, miss0 = self.cache.hits, self.cache.misses
@@ -948,7 +1061,7 @@ class CompiledShardedPlan:
                 fault=f, last_committed_round=-1,
                 fingerprint=plan_fingerprint(self.plan)) from f
         stats = ExecStats(
-            kernel_impl="shard_sim",
+            kernel_impl=self.kernel_impl,
             op_counts={OP_TAGS[i]: c for i, c in enumerate(counts) if c},
             op_wall_s={OP_TAGS[i]: wall[i] for i, c in enumerate(counts) if c},
             kernel_calls=counts[_TAG["ShardKernel"]],
@@ -965,7 +1078,7 @@ class CompiledShardedPlan:
         return rt.host, self.plan.stats(), stats
 
 
-def lower_sharded(plan: ShardedPlan,
+def lower_sharded(plan,
                   kernel_cache: Optional[KernelCache] = None,
                   ) -> CompiledShardedPlan:
     """Compile a sharded plan's per-rank streams into global stage
@@ -976,14 +1089,58 @@ def lower_sharded(plan: ShardedPlan,
     the single-device lowering uses; halo ops become mailbox closures;
     :class:`~repro.core.plan.ShardKernel` ops dispatch through the keyed
     :class:`KernelCache` — uniform shards mean exactly one kernel
-    signature for the whole plan (``shape_buckets == 1``)."""
+    signature for the whole plan (``shape_buckets == 1``).
+
+    Accepts a :class:`~repro.core.hierarchy.HierarchicalPlan` too: the
+    outer streams lower exactly as above, except each ShardKernel binds
+    to its rank's nested inner plan — itself lowered through
+    :func:`lower` in masked ``shard_origin`` mode, sharing this plan's
+    :class:`KernelCache` so inner compiles surface in the same counters.
+
+    A non-identity halo codec (``plan.codec``) runs for real: the
+    ``HaloCompress`` closure slices the edge payload and encodes it —
+    the mailbox then carries the encoded wire triple — and the paired
+    ``HaloRecv`` decodes before attaching, so lossless codecs round-trip
+    bit-exactly through actual encoded bytes while the accounting stays
+    plan-derived.  The ``identity`` codec is fast-pathed (the raw slice
+    is already the copy)."""
     t0 = time.perf_counter()
+    hplan = None
+    if not isinstance(plan, ShardedPlan) and hasattr(plan, "outer"):
+        # HierarchicalPlan (duck-typed: hierarchy.py must stay importable
+        # without this module)
+        hplan = plan
+        outer = plan.outer
+    else:
+        outer = plan
+    if outer.trailing:
+        raise ValueError(
+            f"plan models trailing axes {outer.trailing}; trailing plans "
+            "are dry-run-only (byte/flop accounting) and cannot execute")
     cache = kernel_cache if kernel_cache is not None else KernelCache()
     regs = _SlotAllocator()
     signatures = set()
     stages: List[ShardStage] = []
+    hk = outer.k_ici * outer.radius
 
-    for ordinal, (label, ops) in enumerate(plan.phases()):
+    halo_codec = None
+    if outer.codec and outer.codec != "identity":
+        halo_codec = get_codec(outer.codec)
+
+    inner_compiled = {}
+    if hplan is not None:
+        for rank, sh in enumerate(outer.shards):
+            origin = (sh.y0 - hk, sh.x0 - hk, outer.Y, outer.X)
+            inner_compiled[rank] = lower(
+                hplan.inner[rank], shard_origin=origin, kernel_cache=cache)
+            # uniform shards -> every rank's inner plan presents the same
+            # ext shapes, so the signature census dedupes across ranks
+            for iop in hplan.inner[rank].ops:
+                if isinstance(iop, FusedKernel):
+                    signatures.add(("hier", iop.stencil, iop.steps,
+                                    iop.shape_in))
+
+    for ordinal, (label, ops) in enumerate(outer.phases()):
         regs.new_stage(ordinal)
         bound: List[BoundOp] = []
         for op in ops:
@@ -995,7 +1152,37 @@ def lower_sharded(plan: ShardedPlan,
                     rt.bands[_s] = jnp.asarray(rt.host[_sl])
 
                 bound.append((_TAG["ShardLoad"], run, op.round, op.rank))
+            elif isinstance(op, HaloCompress):
+                if halo_codec is None:
+                    bound.append((_TAG["HaloCompress"], _noop,
+                                  op.round, op.rank))
+                else:
+                    # the encode IS the send: the mailbox carries the
+                    # encoded wire triple instead of the raw edge slice
+                    slot = regs.get(f"band:{op.rank}")
+                    mkey = (op.rank, op.peer, op.axis, op.round)
+                    axis, side = op.axis, op.side
+
+                    def run(rt, _s=slot, _k=mkey, _a=axis, _e=side, _d=hk,
+                            _c=halo_codec):
+                        band = rt.bands[_s]
+                        if _a == 0:
+                            payload = band[-_d:] if _e == "hi" else band[:_d]
+                        else:
+                            payload = (band[:, -_d:] if _e == "hi"
+                                       else band[:, :_d])
+                        rows = np.asarray(payload)
+                        rt.mail[_k] = (_c.encode(rows), rows.shape,
+                                       rows.dtype)
+
+                    bound.append((_TAG["HaloCompress"], run,
+                                  op.round, op.rank))
             elif isinstance(op, HaloSend):
+                if halo_codec is not None:
+                    # wire hop already happened at the HaloCompress
+                    bound.append((_TAG["HaloSend"], _noop,
+                                  op.round, op.rank))
+                    continue
                 slot = regs.get(f"band:{op.rank}")
                 mkey = (op.rank, op.dst, op.axis, op.round)
                 axis, side, depth = op.axis, op.side, op.depth
@@ -1015,7 +1202,7 @@ def lower_sharded(plan: ShardedPlan,
                 axis, side, depth, src = op.axis, op.side, op.depth, op.src
 
                 def run(rt, _s=slot, _k=mkey, _a=axis, _e=side, _d=depth,
-                        _src=src):
+                        _src=src, _c=halo_codec):
                     band = rt.bands[_s]
                     if _src < 0:
                         # mesh edge: zero fill, exactly what ppermute
@@ -1024,17 +1211,32 @@ def lower_sharded(plan: ShardedPlan,
                         shape = ((_d, band.shape[1]) if _a == 0
                                  else (band.shape[0], _d))
                         payload = jnp.zeros(shape, band.dtype)
+                    elif _c is not None:
+                        wire, shape, dtype = rt.mail.pop(_k)
+                        payload = jnp.asarray(
+                            _c.decode(np.asarray(wire), shape, dtype))
                     else:
                         payload = rt.mail.pop(_k)
                     pair = [payload, band] if _e == "lo" else [band, payload]
                     rt.bands[_s] = jnp.concatenate(pair, axis=_a)
 
                 bound.append((_TAG["HaloRecv"], run, op.round, op.rank))
+            elif isinstance(op, HaloDecompress):
+                # decode runs at the paired HaloRecv (the payload must
+                # materialize before it is concatenated anyway)
+                bound.append((_TAG["HaloDecompress"], _noop,
+                              op.round, op.rank))
             elif isinstance(op, ShardKernel):
                 slot = regs.get(f"band:{op.rank}")
+                if hplan is not None:
+                    bound.append((_TAG["ShardKernel"],
+                                  _bind_hier_kernel(
+                                      slot, hk, inner_compiled[op.rank]),
+                                  op.round, op.rank))
+                    continue
                 signatures.add((op.stencil, op.steps, op.h, op.w))
                 bound.append((_TAG["ShardKernel"],
-                              _bind_shard_kernel(slot, op, plan, cache),
+                              _bind_shard_kernel(slot, op, outer, cache),
                               op.round, op.rank))
             elif isinstance(op, ShardStore):
                 slot = regs.free(f"band:{op.rank}", ordinal)
@@ -1051,10 +1253,11 @@ def lower_sharded(plan: ShardedPlan,
         stages.append(ShardStage(label=label, ops=tuple(bound)))
 
     return CompiledShardedPlan(
-        plan=plan,
-        stages=tuple(stages),
+        plan=plan,   # the hierarchical wrapper when given one: stats()
+        stages=tuple(stages),     # must report both levels
         n_slots=regs.n_slots,
         shape_buckets=len(signatures),
         cache=cache,
         lower_s=time.perf_counter() - t0,
+        kernel_impl="shard_sim+hier" if hplan is not None else "shard_sim",
     )

@@ -68,7 +68,8 @@ __all__ = [
     "Op", "ExecutionPlan", "PlanBuilder",
     "fused_kernel_geometry", "fused_box_geometry",
     "DeviceShard", "HaloSend", "HaloRecv", "ShardLoad", "ShardStore",
-    "ShardKernel", "ShardOp", "ShardedPlan",
+    "ShardKernel", "HaloCompress", "HaloDecompress", "ShardOp",
+    "ShardedPlan",
 ]
 
 
@@ -175,6 +176,7 @@ class TransferStats:
     codec_ops: int = 0          # Compress + Decompress op count
     buffer_bytes: int = 0       # on-device region-sharing copies ("O/D")
     ici_bytes: int = 0          # inter-chip halo payload (send side)
+    ici_wire_bytes: int = 0     # ICI bytes after halo codec encoding
     halo_ops: int = 0           # HaloSend + paired HaloRecv op count
     kernel_calls: int = 0
     kernel_hbm_bytes: int = 0   # per-call band read + output write traffic
@@ -216,6 +218,7 @@ class TransferStats:
             "d2h_wire": self.d2h_wire_bytes,
             "odc": self.buffer_bytes,
             "ici": self.ici_bytes,   # 0 for single-device plans
+            "ici_wire": self.ici_wire_bytes,
             "kernel_hbm": self.kernel_hbm_bytes,
         }
 
@@ -697,7 +700,48 @@ class ShardKernel:
     phase: int
 
 
-ShardOp = Union[ShardLoad, ShardStore, HaloSend, HaloRecv, ShardKernel]
+@dataclasses.dataclass(frozen=True)
+class _HaloCodecOp:
+    """Shared shape of the encode/decode halves of a compressed halo.
+
+    The collective analogue of :class:`_CodecOp`: both halves carry the
+    codec id, the raw and modeled-wire byte counts, and the wrapped
+    ``HaloSend``/``HaloRecv``'s edge provenance, so
+    :func:`repro.core.compress.compress_plan` builds one metadata dict
+    per exchange and instantiates the pair from it.  ``wire_nbytes`` is
+    the codec's deterministic analytic model — ICI accounting stays a
+    property of the plan."""
+
+    codec: str
+    rank: int        # owner of the stream this op lives in
+    peer: int        # the other end of the exchange (dst for send side)
+    axis: int
+    side: str        # the wrapped op's edge
+    direction: str   # "send" | "recv"
+    raw_nbytes: int
+    wire_nbytes: int
+    round: int
+    phase: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloCompress(_HaloCodecOp):
+    """Encode a halo payload before it crosses the ICI link.
+
+    Emitted immediately *before* the ``HaloSend`` it wraps; the wire
+    then carries ``wire_nbytes`` instead of ``raw_nbytes``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloDecompress(_HaloCodecOp):
+    """Decode a received halo payload on the far side of the ICI link.
+
+    Emitted immediately *after* the real ``HaloRecv`` it wraps (edge
+    recvs — ``src == -1`` zero fills — are never wrapped)."""
+
+
+ShardOp = Union[ShardLoad, ShardStore, HaloSend, HaloRecv, ShardKernel,
+                HaloCompress, HaloDecompress]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -723,6 +767,8 @@ class ShardedPlan:
     streams: Tuple[Tuple[ShardOp, ...], ...]
     barriers: Tuple[str, ...]
     exact_elements: int
+    codec: str = ""     # "" = uncompressed halos; else the halo codec name
+    trailing: Tuple[int, ...] = ()  # unsharded trailing axes (modeled only)
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -749,10 +795,18 @@ class ShardedPlan:
                 s.d2h_wire_bytes += op.nbytes
             elif isinstance(op, HaloSend):
                 s.ici_bytes += op.nbytes
+                s.ici_wire_bytes += op.nbytes
                 s.halo_ops += 1
             elif isinstance(op, HaloRecv):
                 if op.src >= 0:
                     s.halo_ops += 1
+            elif isinstance(op, HaloCompress):
+                # the wrapped send contributed raw bytes to the wire
+                # accumulator above; the codec swaps them for wire bytes
+                s.codec_ops += 1
+                s.ici_wire_bytes += op.wire_nbytes - op.raw_nbytes
+            elif isinstance(op, HaloDecompress):
+                s.codec_ops += 1
             elif isinstance(op, ShardKernel):
                 s.kernel_calls += 1
                 s.kernel_hbm_bytes += op.hbm_bytes
@@ -797,6 +851,28 @@ class ShardedPlan:
         ranks push less (no payload crosses a mesh boundary)."""
         return max((self.ici_bytes_per_round(r) for r in range(self.n_ranks)),
                    default=0)
+
+    def ici_wire_bytes_per_round(self, rank: int) -> int:
+        """Round-0 *wire* bytes one rank pushes: raw send payloads plus
+        any halo-codec wire-vs-raw adjustments (equal to
+        :meth:`ici_bytes_per_round` on uncompressed plans)."""
+        total = 0
+        for op in self.streams[rank]:
+            if op.round != 0:
+                continue
+            if isinstance(op, HaloSend):
+                total += op.nbytes
+            elif isinstance(op, HaloCompress):
+                total += op.wire_nbytes - op.raw_nbytes
+        return total
+
+    @property
+    def collective_wire_bytes_per_round(self) -> int:
+        """Wire-byte counterpart of :attr:`collective_bytes_per_round` —
+        what the autotuner charges against ``bw_ici`` once halos are
+        routed through a codec."""
+        return max((self.ici_wire_bytes_per_round(r)
+                    for r in range(self.n_ranks)), default=0)
 
     def breakdown(self) -> Dict[str, int]:
         """Per-category byte totals — the Fig. 7 bars plus the L2 ICI

@@ -32,7 +32,8 @@ stage programs on a single device; and
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import math
+from typing import List, Optional, Tuple
 
 from .plan import (
     DeviceShard, HaloRecv, HaloSend, ShardKernel, ShardLoad, ShardOp,
@@ -40,7 +41,17 @@ from .plan import (
 )
 from .stencil import get_stencil
 
-__all__ = ["compile_sharded", "ghost_wedge_elements"]
+__all__ = ["compile_sharded", "ghost_wedge_elements", "shard_working_set"]
+
+
+def shard_working_set(ly: int, lx: int, hk: int, itemsize: int,
+                      trailing: Tuple[int, ...] = ()) -> int:
+    """Bytes resident on a device while one round's kernel runs: the
+    halo-extended input band plus the equally sized output band (the
+    shard_map backend and the lockstep simulator both hold exactly this
+    pair), times any unsharded trailing axes."""
+    t_mult = math.prod(trailing) if trailing else 1
+    return 2 * (ly + 2 * hk) * (lx + 2 * hk) * itemsize * t_mult
 
 
 def _overlap(lo: int, hi: int, lo2: int, hi2: int) -> int:
@@ -74,7 +85,9 @@ def ghost_wedge_elements(Y: int, X: int, radius: int, k_ici: int, n: int,
 
 def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
                     mesh_shape: Tuple[int, int],
-                    itemsize: int = 4) -> ShardedPlan:
+                    itemsize: int = 4,
+                    c_dev: Optional[int] = None,
+                    trailing: Tuple[int, ...] = ()) -> ShardedPlan:
     """Compile ``(shape, stencil, mesh shape, k_ici, n)`` into per-rank
     schedules — geometry only, no arrays and no devices touched.
 
@@ -82,7 +95,17 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
     evenly over the mesh (``shard_map`` requirement), ``n`` must be a
     multiple of ``k_ici`` (uniform scan), and the halo depth
     ``k_ici * r`` must fit inside a shard (one-hop ``ppermute``
-    neighbour exchange)."""
+    neighbour exchange).
+
+    ``c_dev`` (bytes) bounds a shard's resident working set — the
+    in/out halo-extended band pair (:func:`shard_working_set`); a shard
+    that exceeds it is rejected here with a pointer at
+    :func:`repro.core.hierarchy.compile_hierarchical`, which streams the
+    band chunk-wise instead.  ``None`` skips the check (the historical
+    behaviour).  ``trailing`` models extra unsharded axes (e.g. the
+    third axis of a 3-D domain streamed wholesale): byte/flop/element
+    accounting scales by the trailing volume; only ``trailing=()`` plans
+    are executable."""
     st = get_stencil(stencil) if isinstance(stencil, str) else stencil
     r = st.radius
     n_row, n_col = mesh_shape
@@ -102,7 +125,22 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
         raise ValueError(
             f"halo depth k_ici*r={hk} does not fit in a ({ly}, {lx}) "
             "shard (one-hop neighbour exchange)")
+    if any(t < 2 * r + 1 for t in trailing):
+        raise ValueError(
+            f"trailing axes {trailing} need at least 2r+1={2 * r + 1} "
+            "points each (frame + one interior point)")
+    if c_dev is not None:
+        ws = shard_working_set(ly, lx, hk, itemsize, trailing)
+        if ws > c_dev:
+            raise ValueError(
+                f"shard working set {ws} bytes (in/out band pair for a "
+                f"({ly}, {lx}) shard with halo {hk}) exceeds the device "
+                f"budget c_dev={c_dev}; use "
+                "repro.core.hierarchy.compile_hierarchical to stream the "
+                "shard chunk-wise")
     rounds = n // k_ici
+    t_mult = math.prod(trailing) if trailing else 1
+    t_interior = math.prod(t - 2 * r for t in trailing) if trailing else 1
 
     shards = tuple(
         DeviceShard(rank=i * n_col + j, row=i, col=j,
@@ -116,9 +154,9 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
         barriers.append(label)
         return len(barriers) - 1
 
-    shard_bytes = ly * lx * itemsize
-    row_halo = hk * lx * itemsize            # full local width
-    col_halo = hk * (ly + 2 * hk) * itemsize  # row-extended height
+    shard_bytes = ly * lx * itemsize * t_mult
+    row_halo = hk * lx * itemsize * t_mult            # full local width
+    col_halo = hk * (ly + 2 * hk) * itemsize * t_mult  # row-extended height
 
     p = phase("load")
     for sh in shards:
@@ -175,11 +213,11 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
             gy0, gx0 = sh.y0 - hk, sh.x0 - hk
             rows = _overlap(gy0 + r, gy0 + h - r, r, Y - r)
             cols = _overlap(gx0 + r, gx0 + w - r, r, X - r)
-            elements = k_ici * rows * cols
+            elements = k_ici * rows * cols * t_interior
             streams[sh.rank].append(ShardKernel(
                 rank=sh.rank, stencil=st.name, steps=k_ici,
                 gy0=gy0, gx0=gx0, h=h, w=w,
-                hbm_bytes=2 * h * w * itemsize,
+                hbm_bytes=2 * h * w * itemsize * t_mult,
                 flops=elements * st.flops_per_elem,
                 elements=elements, round=rnd, phase=p))
 
@@ -189,9 +227,9 @@ def compile_sharded(stencil, Y: int, X: int, n: int, k_ici: int,
             rank=sh.rank, box=sh.box, nbytes=shard_bytes,
             round=rounds - 1, phase=p))
 
-    exact = n * (Y - 2 * r) * (X - 2 * r)
+    exact = n * (Y - 2 * r) * (X - 2 * r) * t_interior
     return ShardedPlan(
         stencil=st.name, Y=Y, X=X, itemsize=itemsize, n=n, k_ici=k_ici,
         mesh_shape=(n_row, n_col), radius=r, shards=shards,
         streams=tuple(tuple(s) for s in streams), barriers=tuple(barriers),
-        exact_elements=exact)
+        exact_elements=exact, trailing=tuple(trailing))

@@ -53,7 +53,8 @@ class TuneSpec:
     the decomposition.  The grid fields are candidate *domains*; modes
     ignore the grids that do not apply to them (a box sweep reads
     ``box_tile_grid``/``time_depth_grid``, a sharded sweep reads
-    ``k_ici_grid``, the row sweep reads the rest)."""
+    ``k_ici_grid`` plus ``codecs`` for the halo wire, the row sweep
+    reads the rest)."""
 
     stencil: str
     shape: Union[int, Tuple[int, ...]]
@@ -168,10 +169,12 @@ def _from_box(c: BoxChoice, pid: Optional[str]) -> TuneResult:
 def _from_sharded(c: ShardedChoice, pid: Optional[str]) -> TuneResult:
     return TuneResult(
         mode="sharded", engine="sharded",
-        config=dict(engine="sharded", mesh=c.mesh, k_ici=c.k_ici),
+        config=dict(engine="sharded", mesh=c.mesh, k_ici=c.k_ici,
+                    codec=c.codec),
         modeled_s=c.time_s, bottleneck=c.bottleneck, profile_id=pid,
         extras=dict(ici_s=c.ici_s, kernel_s=c.kernel_s,
-                    ici_bytes=c.ici_bytes, redundancy=c.redundancy))
+                    ici_bytes=c.ici_bytes, ici_wire_bytes=c.ici_wire_bytes,
+                    redundancy=c.redundancy))
 
 
 # ------------------------------------------------------- measured runs
@@ -359,7 +362,8 @@ def tune(spec: TuneSpec,
     else:
         choices = _autotune_sharded(
             st, shape[0], spec.steps, hw_res, n_devices=spec.n_devices,
-            k_ici_grid=spec.k_ici_grid, b_elem=spec.b_elem)
+            k_ici_grid=spec.k_ici_grid, codecs=spec.codecs,
+            b_elem=spec.b_elem)
         if isinstance(spec.mesh, tuple):
             choices = [c for c in choices if c.mesh == spec.mesh]
         ranked = [_from_sharded(c, pid) for c in choices]

@@ -114,7 +114,7 @@ def test_breakdown_matches_stats():
     b = plan.breakdown()
     assert b == {"h2d": s.h2d_bytes, "d2h": s.d2h_bytes,
                  "h2d_wire": s.h2d_wire_bytes, "d2h_wire": s.d2h_wire_bytes,
-                 "odc": s.buffer_bytes, "ici": 0,
+                 "odc": s.buffer_bytes, "ici": 0, "ici_wire": 0,
                  "kernel_hbm": s.kernel_hbm_bytes}
     # uncompressed plan: what crosses the wire is the raw payload
     assert b["h2d_wire"] == b["h2d"] and b["d2h_wire"] == b["d2h"]

@@ -258,3 +258,73 @@ def test_service_lifetime_stats_accumulate():
     assert s["kernel_compiles"] > 0
     assert s["slot_pool"]["leases"] == 2
     assert svc.exec_stats.kernel_calls > 0
+
+
+def test_hierarchical_job_runs_through_service_warm_state():
+    """A hierarchical job shares the service's slot pool and kernel
+    cache: inner chunk slots are leased from the pool (and all
+    returned), and a second submission re-uses the masked kernel
+    signature instead of re-tracing."""
+    from repro.core.hierarchy import compile_hierarchical
+    from repro.core.reference import run_reference
+    import jax.numpy as jnp
+
+    svc = StencilService()
+    plan = compile_hierarchical("star2d1r", 48, 48, STEPS, 2, (2, 2),
+                                inner_engine="so2dr", inner_d=3)
+    x = _x((48, 48))
+    res = svc.run_sharded(plan, x)
+    assert res.status == "ok" and res.fault is None
+    ref = np.asarray(run_reference(jnp.asarray(x),
+                                   get_stencil("star2d1r"), STEPS))
+    assert np.abs(res.out - ref).max() < 1e-5
+    assert res.predicted_s > 0
+    svc.slot_pool.assert_balanced()
+    pool = svc.slot_pool.stats()
+    assert pool["leases"] > 0 and pool["in_use"] == 0
+    compiles0 = svc.service_stats()["kernel_compiles"]
+    assert compiles0 > 0
+    res2 = svc.run_sharded(plan, x)
+    assert res2.exec_stats.kernel_compiles == 0
+    assert res2.exec_stats.kernel_cache_hits > 0
+    assert svc.service_stats()["kernel_compiles"] == compiles0
+    svc.slot_pool.assert_balanced()
+
+
+def test_no_leaked_leases_when_hierarchical_job_raises_mid_flush():
+    """A terminal fault after round 0's nested programs have leased and
+    released their chunk slots must leave the pool balanced: the job
+    fails, the service survives, ``assert_balanced`` holds."""
+    from repro.core.faults import KERNEL_FAULT, FaultPlan, FaultTrigger
+    from repro.core.hierarchy import compile_hierarchical
+    from repro.core.recovery import PlanExecutionError
+
+    svc = StencilService()
+    plan = compile_hierarchical("star2d1r", 48, 48, STEPS, 2, (2, 2),
+                                inner_engine="so2dr", inner_d=3)
+    faults = FaultPlan([FaultTrigger(round=1, chunk=None,
+                                     op_class="ShardKernel",
+                                     kind=KERNEL_FAULT)])
+    res = svc.run_sharded(plan, _x((48, 48)), faults=faults)
+    assert res.status == "failed" and res.out is None
+    assert isinstance(res.fault, PlanExecutionError)
+    svc.slot_pool.assert_balanced()
+    pool = svc.slot_pool.stats()
+    # round 0's four inner programs each leased (and returned) a slot
+    assert pool["leases"] >= 4 and pool["in_use"] == 0
+    assert svc.service_stats()["jobs_failed"] == 1
+    # the pool is still serviceable: the same job reruns clean
+    assert svc.run_sharded(plan, _x((48, 48))).status == "ok"
+    svc.slot_pool.assert_balanced()
+
+
+def test_assert_balanced_raises_on_outstanding_lease():
+    pool = SlotPool()
+    regs, bufs = pool.acquire(2, 1)
+    try:
+        import pytest
+        with pytest.raises(AssertionError, match="1 lease"):
+            pool.assert_balanced()
+    finally:
+        pool.release(regs, bufs)
+    pool.assert_balanced()

@@ -363,3 +363,91 @@ def test_autotune_sharded_skips_infeasible_candidates():
     assert all((c.mesh[0] == 1 or c.k_ici * 4 < 128 // c.mesh[0]) and
                (c.mesh[1] == 1 or c.k_ici * 4 < 128 // c.mesh[1])
                for c in ranked)
+
+
+# ------------------------------------------------- golden-fixture pin
+
+
+def test_sharded_plans_bit_identical_to_golden_fixture():
+    """Every stencil x geometry x halo codec of the pre-hierarchy fixture
+    must recompile to the exact same sharded schedule — shards, per-rank
+    op streams, barriers, stats, breakdown, op counts, collective rates —
+    and infeasible configs must fail with the exact same message.
+    ``compile_hierarchical`` with generous capacity must return that very
+    flat plan (expansion is a strict no-op when no shard needs it)."""
+    import json
+    import os
+    import re
+
+    from repro.core.compress import compress_plan
+    from repro.core.hierarchy import compile_hierarchical
+
+    def op_rec(op):
+        t = type(op).__name__
+        d = {"type": t}
+        if t in ("ShardLoad", "ShardStore"):
+            d.update(rank=op.rank, lo=list(op.box.lo), hi=list(op.box.hi),
+                     nbytes=op.nbytes, round=op.round, phase=op.phase)
+        elif t == "HaloSend":
+            d.update(rank=op.rank, dst=op.dst, axis=op.axis, side=op.side,
+                     depth=op.depth, nbytes=op.nbytes, round=op.round,
+                     phase=op.phase)
+        elif t == "HaloRecv":
+            d.update(rank=op.rank, src=op.src, axis=op.axis, side=op.side,
+                     depth=op.depth, nbytes=op.nbytes, round=op.round,
+                     phase=op.phase)
+        elif t == "ShardKernel":
+            d.update(rank=op.rank, stencil=op.stencil, steps=op.steps,
+                     gy0=op.gy0, gx0=op.gx0, h=op.h, w=op.w,
+                     hbm_bytes=op.hbm_bytes, flops=op.flops,
+                     elements=op.elements, round=op.round, phase=op.phase)
+        elif t in ("HaloCompress", "HaloDecompress"):
+            d.update(codec=op.codec, rank=op.rank, peer=op.peer,
+                     axis=op.axis, side=op.side, direction=op.direction,
+                     raw_nbytes=op.raw_nbytes, wire_nbytes=op.wire_nbytes,
+                     round=op.round, phase=op.phase)
+        return d
+
+    path = os.path.join(os.path.dirname(__file__), "data",
+                        "golden_sharded_plans.json")
+    with open(path) as f:
+        golden = json.load(f)
+    assert golden, "golden fixture is empty"
+    checked = errors = 0
+    for key, rec in golden.items():
+        stname, geom, meshs, codec = key.split("/")
+        g = re.match(r"Y(\d+)X(\d+)n(\d+)k(\d+)", geom)
+        Y, X, n, k = map(int, g.groups())
+        mesh = tuple(map(int, re.match(r"mesh(\d+)x(\d+)", meshs).groups()))
+        if "error" in rec:
+            with pytest.raises(ValueError) as exc:
+                compile_sharded(stname, Y, X, n, k, mesh)
+            assert str(exc.value) == rec["error"], key
+            errors += 1
+            continue
+        plan = compile_sharded(stname, Y, X, n, k, mesh)
+        if codec != "identity":
+            plan = compress_plan(plan, codec)
+        m = rec["plan"]
+        assert plan.codec == m["codec"], key
+        assert plan.exact_elements == m["exact_elements"], key
+        assert [dataclasses.asdict(s) for s in plan.shards] \
+            == rec["shards"], key
+        assert [[op_rec(op) for op in s] for s in plan.streams] \
+            == rec["streams"], key
+        assert [list(b) for b in plan.barriers] == rec["barriers"], key
+        assert dataclasses.asdict(plan.stats()) == rec["stats"], key
+        assert plan.breakdown() == rec["breakdown"], key
+        assert plan.op_counts() == rec["op_counts"], key
+        assert plan.collective_bytes_per_round \
+            == rec["collective_bytes_per_round"], key
+        assert plan.collective_wire_bytes_per_round \
+            == rec["collective_wire_bytes_per_round"], key
+        # the hierarchical compiler's flat path is a strict no-op
+        hier = compile_hierarchical(
+            stname, Y, X, n, k, mesh, c_dev=1 << 40,
+            codec=None if codec == "identity" else codec)
+        assert hier == plan, key
+        checked += 1
+    assert checked + errors == len(golden) and checked >= 36, \
+        (checked, errors)

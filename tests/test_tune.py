@@ -136,16 +136,22 @@ def test_tune_box_matches_autotune_box():
 
 
 def test_tune_sharded_matches_autotune_sharded_and_mesh_pin():
+    # tune()'s sharded sweep now prices the halo-codec axis too, so the
+    # parity oracle sweeps the same codec grid as TuneSpec's default
     spec = TuneSpec("box2d1r", 2050, 64, mesh=4)
     got = tune(spec, hw=TPU_V5E)
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)
         want = repro.autotune_sharded(get_stencil("box2d1r"), 2050, 64,
-                                      TPU_V5E, n_devices=4)
+                                      TPU_V5E, n_devices=4,
+                                      codecs=spec.codecs)
     assert got
-    assert [(r.config["mesh"], r.config["k_ici"]) for r in got] \
-        == [(c.mesh, c.k_ici) for c in want]
+    assert [(r.config["mesh"], r.config["k_ici"], r.config["codec"])
+            for r in got] \
+        == [(c.mesh, c.k_ici, c.codec) for c in want]
     assert [r.modeled_s for r in got] == [c.time_s for c in want]
+    assert all(r.extras["ici_wire_bytes"] <= r.extras["ici_bytes"]
+               for r in got)
     pinned = tune(TuneSpec("box2d1r", 2050, 64, mesh=(2, 2)), hw=TPU_V5E)
     assert pinned and all(r.config["mesh"] == (2, 2) for r in pinned)
 
